@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def time_jax(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (µs) of a jitted callable on this host."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]

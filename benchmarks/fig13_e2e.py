@@ -1,0 +1,39 @@
+"""Paper Fig 13/14: end-to-end throughput + energy on ResNet18 / BERT for
+the three searched designs, via the cycle simulator + PPA models."""
+from repro.dse.models import LutDlaPoint
+from repro.dse.ppa import PPA_TABLE
+from repro.simulator.cycle_sim import (BERT_BASE_LAYERS, RESNET18_LAYERS,
+                                       simulate_network)
+
+from .common import emit
+
+DESIGNS = {
+    "design1_tiny": (LutDlaPoint(v=3, c=16, tile_n=128, n_imm=2, n_ccu=4),
+                     "LUT-DLA-1"),
+    "design2_large": (LutDlaPoint(v=4, c=16, tile_n=256, n_imm=4, n_ccu=8),
+                      "LUT-DLA-2"),
+    "design3_fit": (LutDlaPoint(v=3, c=16, tile_n=768, n_imm=4, n_ccu=16),
+                    "LUT-DLA-3"),
+}
+
+#: NVDLA-Large reference (official perf model ballpark, 2048 GOPS peak,
+#: ~40% utilisation on these nets)
+NVDLA_LARGE_MS = {"resnet18": 3.1, "bert": 310.0}
+NVDLA_LARGE_MW = 766.0
+
+
+def run() -> None:
+    for net, layers in [("resnet18", RESNET18_LAYERS),
+                        ("bert", BERT_BASE_LAYERS)]:
+        for name, (pt, ppa_key) in DESIGNS.items():
+            r = simulate_network(layers, pt)
+            power = PPA_TABLE[ppa_key]["power"]
+            energy_mj = power * r["time_s"]
+            emit(f"fig13/{net}/{name}", r["time_s"] * 1e6,
+                 f"time={r['time_s']*1e3:.2f}ms gops={r['gops']:.0f} "
+                 f"energy={energy_mj:.1f}mJ stalls="
+                 f"{r['stall_cycles']/max(r['cycles'],1):.1%}")
+        ref_ms = NVDLA_LARGE_MS[net]
+        ref_mj = NVDLA_LARGE_MW * ref_ms / 1e3
+        emit(f"fig13/{net}/nvdla_large_ref", ref_ms * 1e3,
+             f"time={ref_ms}ms energy={ref_mj:.1f}mJ (official perf model)")

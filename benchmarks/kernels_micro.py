@@ -1,0 +1,45 @@
+"""Microbenchmarks of the core ops on this host (CPU, ref impl + Pallas
+interpret) — wall-time sanity, not TPU numbers (those come from the
+dry-run roofline)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut import build_lut
+from repro.kernels import ref
+from repro.kernels.ops import lut_matmul, vq_assign
+
+from .common import emit, time_jax
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    m, k, n, v, c = 512, 768, 768, 8, 16
+    nc = k // v
+    x = jax.random.normal(key, (m, nc, v))
+    z = jax.random.normal(jax.random.fold_in(key, 1), (nc, c, v))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (k, n))
+    lut = build_lut(w, z)
+
+    assign_j = jax.jit(lambda a, b: ref.assign_ref(a, b, "l2"))
+    t = time_jax(assign_j, x, z)
+    emit("micro/assign_l2_512x768", t, f"{m*nc*c*2/t*1e6/1e9:.1f} GFLOP/s")
+
+    idx = assign_j(x, z)
+    lookup_j = jax.jit(ref.lut_gemm_onehot)
+    t = time_jax(lookup_j, idx, lut)
+    emit("micro/lut_gemm_onehot_512x768x768", t,
+         f"{2*m*nc*c*n/t*1e6/1e9:.1f} GFLOP/s")
+
+    dense_j = jax.jit(lambda a, b: a @ b)
+    xf = x.reshape(m, k)
+    t_dense = time_jax(dense_j, xf, w)
+    emit("micro/dense_gemm_512x768x768", t_dense,
+         f"{2*m*k*n/t_dense*1e6/1e9:.1f} GFLOP/s")
+
+    # int8 table halves the bytes the lookup streams (the TPU decode win)
+    from repro.core.lut import quantize_lut_int8
+    lut8, scale = quantize_lut_int8(lut)
+    lookup8_j = jax.jit(lambda i, l, s: ref.lut_gemm_onehot(i, l, s))
+    t8 = time_jax(lookup8_j, idx, lut8, scale)
+    emit("micro/lut_gemm_int8", t8,
+         f"bytes {lut8.nbytes/1e6:.1f}MB vs bf16 weights {w.nbytes*0.5/1e6:.1f}MB")

@@ -1,0 +1,24 @@
+"""Paper Table I: dataflow impact on on-chip memory (M=512, K=N=768,
+v=4, c=32). Exact reproduction of the LS/KNM/KMN/MKN cells (int8 LUT
+entries + int8 requantized psums, T_n=32 — the calibration that matches the
+paper's own Table VII SRAM numbers)."""
+from repro.dse.models import DataflowOrder, LutDlaPoint, dataflow_memory
+
+from .common import emit
+
+PAPER = {"MNK": 2064.1, "NMK": 2090.9, "MKN": 2064.8, "KMN": 408.0,
+         "KNM": 385.3, "LUT-Stationary": 17.3}
+
+
+def run() -> None:
+    pt = LutDlaPoint(v=4, c=32, bits_lut=8, bits_out=8, tile_n=32)
+    for order in DataflowOrder:
+        r = dataflow_memory(512, 768, 768, pt, order)
+        paper = PAPER[order.value]
+        emit(f"table1/{order.value}_total_kb", 0.0,
+             f"ours={r['total_kb']:.1f}KB paper={paper}KB "
+             f"scratch={r['scratchpad_kb']:.2f} idx={r['indices_kb']:.2f} "
+             f"lut={r['psum_lut_kb']:.1f}")
+    ls = dataflow_memory(512, 768, 768, pt, DataflowOrder.LS)["total_kb"]
+    mnk = dataflow_memory(512, 768, 768, pt, DataflowOrder.MNK)["total_kb"]
+    emit("table1/ls_vs_mnk_reduction", 0.0, f"{mnk / ls:.0f}x smaller")

@@ -1,0 +1,56 @@
+"""Paper Table II / Fig 7: multistage vs single-stage LUTBoost training.
+
+Scaled-down proxy (CPU container): a small transformer LM on the synthetic
+successor task. The claim under test is RELATIVE — multistage (k-means init
++ centroid-only warmup + joint) converges to a better loss than single-stage
+(random centroids, joint from scratch), for both L2 and L1 similarity.
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.lut import QuantConfig
+from repro.core.lutboost import LutBoostSchedule, convert
+from repro.data import SyntheticDataset
+from repro.models.model import Model
+from repro.train import TrainConfig, Trainer
+
+from .common import emit
+
+
+def _train(metric: str, multistage: bool, steps: int = 140,
+           seed: int = 0) -> float:
+    cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+    m = Model(cfg)
+    ds = SyntheticDataset(cfg, global_batch=16, seq_len=64, seed=seed)
+    qc = QuantConfig(mode="lut_train", v=4, c=16, metric=metric,
+                     recon_weight=0.05)
+    params = m.init(jax.random.PRNGKey(seed), qc)
+
+    # warm-start the dense weights so conversion (not LM training from
+    # scratch) is what's being measured — mirrors the paper's setting of
+    # converting a trained model.
+    dense = Trainer(m, ds, qc.replace(mode="dense"),
+                    TrainConfig(total_steps=100, lr=3e-3, warmup=10,
+                                log_every=10**9))
+    params, _, _ = dense.run(params)
+
+    if multistage:
+        params = convert(lambda p, b: m.forward(
+            p, b, qc.replace(mode="dense"))[0], params, ds.batch(0), qc)
+        sched = LutBoostSchedule(stage2_steps=40, stage3_steps=steps - 40)
+    else:
+        sched = None      # single stage: random centroids, joint training
+    tc = TrainConfig(total_steps=steps, lr=1e-3, warmup=0, log_every=10**9)
+    _, _, hist = Trainer(m, ds, qc, tc, lutboost=sched).run(params)
+    return float(np.mean(hist["loss"][-10:]))
+
+
+def run() -> None:
+    for metric in ("l2", "l1"):
+        single = _train(metric, multistage=False)
+        multi = _train(metric, multistage=True)
+        emit(f"table2/single_stage_{metric}", 0.0, f"loss={single:.4f}")
+        emit(f"table2/multi_stage_{metric}", 0.0,
+             f"loss={multi:.4f} delta={single - multi:+.4f} "
+             f"(paper: multistage +3.3-7.2 acc pts)")

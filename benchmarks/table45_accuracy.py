@@ -1,0 +1,64 @@
+"""Paper Tables IV+V: LUT-model accuracy across similarity metrics,
+quantisation modes, and equivalent bit-widths.
+
+Scaled-down proxy: a small LM on the synthetic successor task, measuring CE
+loss (lower = better, analogous to accuracy). Claims under test:
+  * Table IV: L1 ≈ L2 (within ~1 pt), int8 LUT costs <1 pt extra.
+  * Table V: accuracy improves with c and degrades with v (equiv-bit sweep).
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import precompute_model
+from repro.core.lut import QuantConfig
+from repro.core.lutboost import LutBoostSchedule, convert
+from repro.data import SyntheticDataset
+from repro.models.model import Model
+from repro.train import TrainConfig, Trainer
+
+from .common import emit
+
+
+def _convert_and_eval(v: int, c: int, metric: str,
+                      lut_dtype: str = "float32", seed: int = 0):
+    cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+    m = Model(cfg)
+    ds = SyntheticDataset(cfg, global_batch=16, seq_len=64, seed=seed)
+    qc = QuantConfig(mode="lut_train", v=v, c=c, metric=metric,
+                     recon_weight=0.05)
+    params = m.init(jax.random.PRNGKey(seed), qc)
+    dense_tc = TrainConfig(total_steps=120, lr=3e-3, warmup=10,
+                           log_every=10**9)
+    params, _, dh = Trainer(m, ds, qc.replace(mode="dense"), dense_tc).run(
+        params)
+    dense_loss = float(np.mean(dh["loss"][-10:]))
+
+    params = convert(lambda p, b: m.forward(
+        p, b, qc.replace(mode="dense"))[0], params, ds.batch(0), qc)
+    sched = LutBoostSchedule(stage2_steps=30, stage3_steps=80)
+    tc = TrainConfig(total_steps=110, lr=1e-3, warmup=0, log_every=10**9)
+    params, _, hist = Trainer(m, ds, qc, tc, lutboost=sched).run(params)
+
+    qi = qc.replace(mode="lut_infer", lut_dtype=lut_dtype, impl="ref")
+    pi = precompute_model(params, qi)
+    eval_loss = 0.0
+    for i in range(4):
+        eval_loss += float(m.loss(pi, ds.batch(100 + i), qi)[0])
+    return dense_loss, eval_loss / 4
+
+
+def run() -> None:
+    # Table IV: metric × LUT dtype at fixed (v=4, c=16)
+    for metric in ("l2", "l1", "chebyshev"):
+        for dt in ("float32", "int8"):
+            dense, lut = _convert_and_eval(4, 16, metric, dt)
+            emit(f"table4/{metric}_{dt}", 0.0,
+                 f"dense_ce={dense:.4f} lut_ce={lut:.4f} "
+                 f"drop={lut - dense:+.4f}")
+    # Table V: equivalent-bit sweep
+    for (v, c) in [(8, 8), (8, 16), (4, 8), (4, 16), (2, 8), (2, 16)]:
+        bits = np.ceil(np.log2(c)) / v
+        _, lut = _convert_and_eval(v, c, "l2")
+        emit(f"table5/v{v}_c{c}", 0.0,
+             f"equiv_bits={bits:.2f} lut_ce={lut:.4f}")

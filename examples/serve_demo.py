@@ -1,0 +1,46 @@
+"""Batched serving demo: train briefly, convert to LUT-int8, serve requests
+through the Engine (prefill + per-step decode with KV caches).
+
+Run: PYTHONPATH=src python examples/serve_demo.py
+"""
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import precompute_model
+from repro.core.lut import DENSE, QuantConfig
+from repro.data import SyntheticDataset
+from repro.models.model import Model
+from repro.serve import Engine, Request
+from repro.train import TrainConfig, Trainer
+
+
+def main() -> None:
+    cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+    model = Model(cfg)
+    ds = SyntheticDataset(cfg, global_batch=16, seq_len=64)
+    params = model.init(jax.random.PRNGKey(0), DENSE)
+    tc = TrainConfig(total_steps=150, lr=3e-3, warmup=10, log_every=50)
+    params, _, _ = Trainer(model, ds, DENSE, tc).run(params)
+
+    qi = QuantConfig(mode="lut_infer", v=4, c=16, lut_dtype="int8",
+                     impl="ref")
+    # NOTE: in production you'd run LUTBoost stages ②③ before deploying;
+    # here we convert directly to show the serving path.
+    from repro.core.lutboost import convert
+    lut_params = convert(lambda p, b: model.forward(p, b, DENSE)[0],
+                         params, ds.batch(0),
+                         qi.replace(mode="lut_train"))
+    lut_params = precompute_model(lut_params, qi)
+
+    for tag, ps, qc in [("dense", params, DENSE), ("lut-int8", lut_params, qi)]:
+        eng = Engine(model, ps, qc, batch_size=4, max_seq=96)
+        reqs = [Request(tokens=[t, t + 1, t + 2], max_new_tokens=10)
+                for t in (5, 50, 111, 200)]
+        eng.run(reqs)
+        print(f"[{tag}]")
+        for r in reqs:
+            print(f"  prompt={r.tokens} -> {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — LUT-DLA (vector-quantized LUT-based GEMM) framework in JAX."""
+__version__ = "0.1.0"

@@ -1,0 +1,2 @@
+"""Fault-tolerant checkpointing with elastic resharding restore."""
+from .manager import CheckpointManager, load_pytree, save_pytree

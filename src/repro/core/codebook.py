@@ -1,0 +1,106 @@
+"""Codebooks for VQ-AMM (paper §II-B step-1).
+
+A :class:`CodebookSpec` describes the vector-quantization operating point of
+one LUT-ified GEMM:
+
+  * ``v``       sub-vector length (K is split into ``nc = K // v`` subspaces)
+  * ``c``       number of centroids per subspace
+  * ``metric``  similarity metric used by assignment
+
+Centroid tensors are shaped ``(nc, c, v)`` and live alongside the weights in
+the model pytree (they are trainable parameters in LUTBoost stages 2/3).
+
+K-means initialisation from calibration activations is LUTBoost step-1.
+Implemented as a fully-jittable ``jax.lax`` loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .similarity import Metric, pairwise_distance
+
+
+@dataclasses.dataclass(frozen=True)
+class CodebookSpec:
+    v: int = 8
+    c: int = 16
+    metric: Metric = "l2"
+
+    def num_subspaces(self, k: int) -> int:
+        if k % self.v != 0:
+            raise ValueError(f"K={k} not divisible by v={self.v}")
+        return k // self.v
+
+    @property
+    def equivalent_bits(self) -> float:
+        """Paper Table V: equivalent bit-width = ceil(log2 c) / v."""
+        import math
+        return math.ceil(math.log2(self.c)) / self.v
+
+    def lut_entries(self, k: int, n: int) -> int:
+        """Number of LUT entries for a (K, N) weight matrix."""
+        return self.num_subspaces(k) * self.c * n
+
+
+def init_centroids(key: jax.Array, k: int, spec: CodebookSpec,
+                   scale: float = 0.02, dtype=jnp.float32) -> jax.Array:
+    """Random-normal centroid init, shape (nc, c, v)."""
+    nc = spec.num_subspaces(k)
+    return scale * jax.random.normal(key, (nc, spec.c, spec.v), dtype=dtype)
+
+
+def kmeans(x: jax.Array, c: int, metric: Metric = "l2", iters: int = 10,
+           key: Optional[jax.Array] = None) -> jax.Array:
+    """K-means over x (n, v) -> centroids (c, v).
+
+    Uses k-means++-lite seeding (random distinct samples) and Lloyd updates.
+    For L1 the true minimiser is the median; we use the mean for all metrics
+    (the paper trains centroids afterwards, so seeding quality only needs to
+    be "good", not optimal). Empty clusters are re-seeded from the data point
+    farthest from its centroid.
+    """
+    n, v = x.shape
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    perm = jax.random.permutation(key, n)[:c]
+    init = x[perm]
+
+    def step(cents, _):
+        d = pairwise_distance(x, cents, metric)               # (n, c)
+        idx = jnp.argmin(d, axis=-1)                          # (n,)
+        onehot = jax.nn.one_hot(idx, c, dtype=x.dtype)        # (n, c)
+        counts = onehot.sum(axis=0)                           # (c,)
+        sums = jnp.einsum("nc,nv->cv", onehot, x)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # Re-seed empty clusters with the worst-represented point.
+        worst = x[jnp.argmax(jnp.min(d, axis=-1))]
+        new = jnp.where((counts > 0)[:, None], new, worst[None, :])
+        return new, None
+
+    cents, _ = jax.lax.scan(step, init, None, length=iters)
+    return cents
+
+
+def kmeans_codebook(acts: jax.Array, k: int, spec: CodebookSpec,
+                    iters: int = 10, key: Optional[jax.Array] = None,
+                    max_samples: int = 4096) -> jax.Array:
+    """LUTBoost step-1: k-means per subspace over calibration activations.
+
+    acts : (..., K) calibration activations for this layer.
+    returns centroids (nc, c, v).
+    """
+    nc = spec.num_subspaces(k)
+    flat = acts.reshape(-1, nc, spec.v)                       # (n, nc, v)
+    n = flat.shape[0]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if n > max_samples:
+        sel = jax.random.permutation(key, n)[:max_samples]
+        flat = flat[sel]
+    keys = jax.random.split(key, nc)
+    return jax.vmap(lambda xs, kk: kmeans(xs, spec.c, spec.metric, iters, kk),
+                    in_axes=(1, 0))(flat, keys)               # (nc, c, v)

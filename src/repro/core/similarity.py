@@ -1,0 +1,152 @@
+"""Similarity metrics between input sub-vectors and centroids (paper §V-2).
+
+The paper supports three metrics, trading model accuracy for hardware cost:
+
+  * L2 (Euclidean)   — sum (v - z)^2          (1 mul + 1 add per element)
+  * L1 (Manhattan)   — sum |v - z|            (adders + abs only)
+  * Chebyshev        — max |v - z|            (abs + max tree only)
+
+All functions take
+  x : (..., v)        input sub-vectors
+  z : (c, v)          centroids for one subspace
+and return distances (..., c) — smaller = more similar.
+
+Assignment (argmin) is non-differentiable; training uses a straight-through
+estimator implemented in :func:`ste_quantize` — forward returns the selected
+centroid, backward passes gradients to both the input (identity, STE) and the
+centroids (via the soft selection path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Metric = Literal["l2", "l1", "chebyshev"]
+
+#: Hardware cost of one element-wise similarity op (paper Eq. 1's alpha_sim):
+#: L2 = mul+add, L1 = abs+add, Chebyshev = abs+max.
+ALPHA_SIM = {"l2": 2.0, "l1": 1.0, "chebyshev": 1.0}
+
+
+def pairwise_distance(x: jax.Array, z: jax.Array, metric: Metric) -> jax.Array:
+    """Distances between x (..., v) and centroids z (c, v) -> (..., c)."""
+    if metric == "l2":
+        # ||x||^2 - 2 x.z + ||z||^2 : the MXU-friendly expansion (no (.,c,v)
+        # intermediate). Matches the Pallas kernel's formulation.
+        x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (..., 1)
+        z2 = jnp.sum(z * z, axis=-1)                          # (c,)
+        xz = jnp.einsum("...v,cv->...c", x, z)                # (..., c)
+        return x2 - 2.0 * xz + z2
+    diff = jnp.abs(x[..., None, :] - z)                       # (..., c, v)
+    if metric == "l1":
+        return jnp.sum(diff, axis=-1)
+    if metric == "chebyshev":
+        return jnp.max(diff, axis=-1)
+    raise ValueError(f"unknown metric: {metric}")
+
+
+def assign(x: jax.Array, z: jax.Array, metric: Metric) -> jax.Array:
+    """Index of the nearest centroid. x (..., v), z (c, v) -> (...,) int32."""
+    d = pairwise_distance(x, z, metric)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def ste_quantize(x: jax.Array, z: jax.Array, metric: Metric) -> jax.Array:
+    """Quantize sub-vectors to their nearest centroid with an STE backward.
+
+    Forward:  x_hat = z[argmin_j d(x, z_j)]
+    Backward: dL/dx  = dL/dx_hat                (straight-through, paper §V-2)
+              dL/dz  = scatter of dL/dx_hat onto selected centroids (the
+                       k-means-style gradient: each centroid receives the
+                       cotangents of the sub-vectors assigned to it).
+
+    x : (..., v), z : (c, v) -> (..., v)
+    """
+    idx = assign(x, z, metric)
+    return jnp.take(z, idx, axis=0)
+
+
+def _ste_fwd(x, z, metric):
+    idx = assign(x, z, metric)
+    return jnp.take(z, idx, axis=0), (idx, z.shape[0])
+
+
+def _ste_bwd(metric, res, g):
+    idx, c = res
+    # dL/dx: straight-through.
+    dx = g
+    # dL/dz: sum cotangents per selected centroid (one-hot scatter-add).
+    onehot = jax.nn.one_hot(idx, c, dtype=g.dtype)            # (..., c)
+    dz = jnp.einsum("...c,...v->cv", onehot, g)
+    return dx, dz
+
+
+ste_quantize.defvjp(_ste_fwd, _ste_bwd)
+
+
+def pairwise_distance_subspaces(x: jax.Array, z: jax.Array,
+                                metric: Metric) -> jax.Array:
+    """x (..., nc, v), z (nc, c, v) -> distances (..., nc, c)."""
+    if metric == "l2":
+        x2 = jnp.sum(x * x, axis=-1)[..., None]
+        z2 = jnp.sum(z * z, axis=-1)
+        xz = jnp.einsum("...kv,kcv->...kc", x, z)
+        return x2 - 2.0 * xz + z2
+    diff = jnp.abs(x[..., None, :] - z)                       # (..., nc, c, v)
+    return jnp.sum(diff, -1) if metric == "l1" else jnp.max(diff, -1)
+
+
+def assign_subspaces(x: jax.Array, z: jax.Array, metric: Metric) -> jax.Array:
+    """x (..., nc, v), z (nc, c, v) -> (..., nc) int32."""
+    return jnp.argmin(pairwise_distance_subspaces(x, z, metric),
+                      axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def ste_quantize_subspaces(x: jax.Array, z: jax.Array,
+                           metric: Metric) -> jax.Array:
+    """Per-subspace STE quantisation: x (..., nc, v), z (nc, c, v)."""
+    idx = assign_subspaces(x, z, metric)
+    return _gather_centroids(z, idx)
+
+
+def _gather_centroids(z: jax.Array, idx: jax.Array) -> jax.Array:
+    # z (nc, c, v), idx (..., nc) -> (..., nc, v)
+    return jnp.einsum("...kc,kcv->...kv",
+                      jax.nn.one_hot(idx, z.shape[1], dtype=z.dtype), z)
+
+
+def _stes_fwd(x, z, metric):
+    idx = assign_subspaces(x, z, metric)
+    return _gather_centroids(z, idx), (idx, z.shape[1])
+
+
+def _stes_bwd(metric, res, g):
+    idx, c = res
+    dx = g                                                    # straight-through
+    onehot = jax.nn.one_hot(idx, c, dtype=g.dtype)            # (..., nc, c)
+    dz = jnp.einsum("...kc,...kv->kcv", onehot, g)
+    return dx, dz
+
+
+ste_quantize_subspaces.defvjp(_stes_fwd, _stes_bwd)
+
+
+def soft_assignment(x: jax.Array, z: jax.Array, metric: Metric,
+                    temperature: float = 1.0) -> jax.Array:
+    """Differentiable soft assignment (softmax over -distance/T), (..., c).
+
+    z may be a single codebook (c, v) or per-subspace codebooks (nc, c, v)
+    with x (..., nc, v). Used by LUTBoost stage-2 warmup when a smooth
+    relaxation helps centroid training stability (LUT-NN-style); the hard
+    STE path is the default.
+    """
+    if z.ndim == 3:
+        d = pairwise_distance_subspaces(x, z, metric)
+    else:
+        d = pairwise_distance(x, z, metric)
+    return jax.nn.softmax(-d / jnp.maximum(temperature, 1e-6), axis=-1)

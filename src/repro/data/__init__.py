@@ -1,0 +1,2 @@
+"""Deterministic, step-resumable synthetic data pipeline."""
+from .synthetic import SyntheticDataset, make_batch_specs

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the LUT-DLA hot spots (assign + lut_gemm)."""
+from . import ops, ref
+from .assign import vq_assign_pallas
+from .lut_gemm import lut_gemm_pallas
+from .ops import lut_matmul, vq_assign

@@ -1,0 +1,47 @@
+"""Public kernel entry points with impl dispatch.
+
+``impl``:
+  * "pallas"  — the Pallas kernels (interpret=True automatically on CPU).
+  * "ref"     — XLA-native one-hot/einsum formulation. Used for full-model
+                lowering in the multi-pod dry-run: the HLO cost is identical
+                to the kernel's MXU work, and XLA can shard/fuse it.
+  * "auto"    — pallas on TPU, ref otherwise (default).
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import Metric
+from . import ref as _ref
+from .assign import vq_assign_pallas
+from .lut_gemm import lut_gemm_pallas
+
+Impl = Literal["auto", "pallas", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def vq_assign(x: jax.Array, z: jax.Array, metric: Metric = "l2",
+              impl: Impl = "auto", **kw) -> jax.Array:
+    """x (M, nc, v), z (nc, c, v) -> idx (M, nc) int32."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.assign_ref(x, z, metric)
+    return vq_assign_pallas(x, z, metric, interpret=not _on_tpu(), **kw)
+
+
+def lut_matmul(idx: jax.Array, lut: jax.Array, scale=None,
+               impl: Impl = "auto", out_dtype=jnp.float32, **kw) -> jax.Array:
+    """idx (M, nc) int32, lut (nc, c, N) [+ scale (N,)] -> (M, N)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.lut_gemm_onehot(idx, lut, scale, out_dtype=out_dtype)
+    return lut_gemm_pallas(idx, lut, scale, interpret=not _on_tpu(),
+                           out_dtype=out_dtype, **kw)

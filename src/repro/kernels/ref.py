@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the LUT-DLA kernels.
+
+These are the ground truth for kernel tests AND the XLA-native path used by
+full-model lowering (the one-hot-matmul formulation has identical MXU cost to
+the Pallas kernel, so roofline numbers derived from it are faithful).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import Metric, pairwise_distance
+
+
+def assign_ref(x: jax.Array, z: jax.Array, metric: Metric = "l2") -> jax.Array:
+    """Nearest-centroid assignment per subspace.
+
+    x : (M, nc, v)   input sub-vectors
+    z : (nc, c, v)   centroids
+    -> (M, nc) int32 indices
+    """
+    if metric == "l2":
+        # batched MXU form: ||x||^2 - 2<x,z> + ||z||^2
+        x2 = jnp.sum(x * x, axis=-1)[..., None]                # (M, nc, 1)
+        z2 = jnp.sum(z * z, axis=-1)[None]                     # (1, nc, c)
+        xz = jnp.einsum("mkv,kcv->mkc", x, z)                  # (M, nc, c)
+        d = x2 - 2.0 * xz + z2
+    else:
+        diff = jnp.abs(x[:, :, None, :] - z[None])             # (M, nc, c, v)
+        d = jnp.sum(diff, -1) if metric == "l1" else jnp.max(diff, -1)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def lut_gemm_ref(idx: jax.Array, lut: jax.Array,
+                 scale: jax.Array | None = None) -> jax.Array:
+    """LUT gather-accumulate (gather formulation — the literal oracle).
+
+    idx  : (M, nc) int32
+    lut  : (nc, c, N)   (float or int8)
+    scale: optional (N,) dequant scale when lut is int8
+    -> (M, N) float32
+    """
+    # per-subspace row gather: lut[k][idx[:, k]] -> (nc, M, N), then sum_k.
+    gathered = jax.vmap(lambda l, i: l[i], in_axes=(0, 1))(
+        lut.astype(jnp.float32), idx)
+    out = jnp.sum(gathered, axis=0)
+    if scale is not None:
+        out = out * scale[None, :].astype(jnp.float32)
+    return out
+
+
+def lut_gemm_onehot(idx: jax.Array, lut: jax.Array,
+                    scale: jax.Array | None = None,
+                    out_dtype=jnp.float32) -> jax.Array:
+    """One-hot-matmul formulation (TPU-native; identical math to the kernel).
+
+    out[m, n] = sum_k onehot(idx[m,k]) @ lut[k]    — MXU friendly.
+    """
+    nc, c, n = lut.shape
+    onehot = jax.nn.one_hot(idx, c, dtype=out_dtype)           # (M, nc, c)
+    out = jnp.einsum("mkc,kcn->mn", onehot,
+                     lut.astype(out_dtype),
+                     preferred_element_type=out_dtype)
+    if scale is not None:
+        out = out * scale[None, :].astype(out_dtype)
+    return out

@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb runner: re-lower the three chosen cells after each code
+change and log (hypothesis, before, after) to results/perf/.
+
+Cells (see EXPERIMENTS.md §Perf for selection rationale):
+  * zamba2-1.2b  × long_500k   — worst baseline roofline fraction
+  * gemma3-4b    × prefill_32k — most collective-bound
+  * gemma3-27b   × decode_32k  — most representative of the paper's
+                                 technique (large-model LUT-int8 decode)
+"""
+import argparse    # noqa: E402
+import json        # noqa: E402
+from typing import Optional   # noqa: E402
+
+from repro.launch.dryrun import run_cell            # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+CELLS = [
+    ("zamba2-1.2b", "long_500k"),
+    ("gemma3-4b", "prefill_32k"),
+    ("gemma3-27b", "decode_32k"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", required=True,
+                    help="iteration tag, e.g. I1_bf16_kv")
+    ap.add_argument("--cell", default="all",
+                    help="'all' or arch:shape")
+    ap.add_argument("--out", default="results/perf")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "False"):
+            v = v == "True"
+        overrides[k] = v
+
+    cells = CELLS if args.cell == "all" else \
+        [tuple(args.cell.split(":"))]
+    mesh = make_production_mesh()
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape in cells:
+        res = run_cell(arch, shape, mesh, "lut", cfg_overrides=overrides)
+        path = os.path.join(args.out, f"{args.tag}__{arch}__{shape}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        rl = res.get("roofline", {})
+        print(f"[hillclimb:{args.tag}] {arch}×{shape}: "
+              f"frac={rl.get('roofline_fraction', 0):.4f} "
+              f"t_mem={rl.get('t_memory_s', 0):.3e} "
+              f"t_comp={rl.get('t_compute_s', 0):.3e} "
+              f"t_coll={rl.get('t_collective_s', 0):.3e}")
+
+
+if __name__ == "__main__":
+    main()

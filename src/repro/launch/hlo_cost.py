@@ -1,0 +1,410 @@
+"""While-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts loop bodies ONCE (verified on this
+backend), which undercounts scan-over-layers models by ~num_layers. This
+module parses the optimized HLO text and computes:
+
+  * flops            — dot FLOPs, with while bodies × trip count, fusion
+                       subcomputations traversed, conditionals = max(branch)
+  * bytes            — HBM-traffic proxy: per-instruction result+operand
+                       bytes at fusion granularity (inside-fusion values stay
+                       in registers/VMEM), with loop multiplication
+  * collectives      — operand bytes per collective kind, × trip counts
+
+Trip counts are extracted from each while's condition region (the loop bound
+appears as an integer constant compared against the induction variable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\]"
+    r"(?:\{[\d,]*\})?))\s+([a-z0-9\-]+)(?:\(|\.)")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+#: ops excluded from the bytes (HBM traffic) proxy
+_BYTES_SKIP = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "iota", "while", "conditional",
+               "call", "copy-start", "copy-done"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+    @property
+    def is_root(self) -> bool:
+        return self.line.lstrip().startswith("ROOT")
+
+    @property
+    def operands(self) -> List[str]:
+        after = self.line.split("(", 1)
+        if len(after) < 2:
+            return []
+        return _OPERAND_RE.findall(after[1].split(")")[0])
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    sizes: Dict[str, str]      # instr name -> type str
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if current is None:
+            if ("->" in line and line.rstrip().endswith("{")
+                    and not stripped.startswith("//")):
+                m = _COMP_START_RE.match(stripped)
+                if m:
+                    current = Computation(m.group(1), [], {})
+            continue
+        if stripped.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, op = m.groups()
+            current.instrs.append(Instr(name, type_str, op, stripped))
+            current.sizes[name] = type_str
+    if current is not None:
+        comps[current.name] = current
+    return comps
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Loop bound = the largest integer constant in the condition region
+    (covering `i < N` and fused comparison patterns)."""
+    best = 1
+    seen = set()
+
+    def visit(name):
+        if name in seen or name not in comps:
+            return
+        seen.add(name)
+        for ins in comps[name].instrs:
+            for c in _CONST_RE.findall(ins.line):
+                best_local = int(c)
+                nonlocal best
+                if best_local > best:
+                    best = best_local
+            cm = _CALLS_RE.search(ins.line)
+            if cm:
+                visit(cm.group(1))
+
+    visit(cond_name)
+    return max(best, 1)
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    """2 × prod(result dims) × prod(contracting dim sizes of lhs)."""
+    result = _shape_dims(ins.type_str)
+    if not result:
+        return 0.0
+    out_elems = 1
+    for d in result[0][1]:
+        out_elems *= d
+    cm = _CONTRACT_RE.search(ins.line)
+    operands = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
+    lhs = next((o for o in operands if o in comp.sizes), None)
+    if cm is None or lhs is None:
+        return 2.0 * out_elems            # fallback: treat as elementwise-ish
+    lhs_dims = _shape_dims(comp.sizes[lhs])
+    if not lhs_dims:
+        return 2.0 * out_elems
+    contract = 1
+    for ci in cm.group(1).split(","):
+        if ci:
+            idx = int(ci)
+            if idx < len(lhs_dims[0][1]):
+                contract *= lhs_dims[0][1][idx]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_OPS})
+    coll_count: float = 0.0
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(self.flops * k, self.bytes * k,
+                       {kk: v * k for kk, v in self.coll.items()},
+                       self.coll_count * k)
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] += v
+        self.coll_count += other.coll_count
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    after = ins.line.split("(", 1)
+    if len(after) < 2:
+        return 0
+    total = 0
+    for ref in _OPERAND_RE.findall(after[1].split(")")[0]):
+        if ref in comp.sizes:
+            total += _type_bytes(comp.sizes[ref])
+    return total
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_bytes(ins: Instr, comp: Computation,
+                  comps: Dict[str, Computation], called: str) -> int:
+    """HBM bytes for a fusion call, HloCostAnalysis-style:
+
+    * a fused dynamic-slice reads only the slice, not the whole operand
+      (scan-over-layers parameter slicing);
+    * a fusion rooted in dynamic-update-slice writes only the update
+      (in-place KV-cache writes), and its sliced target is not re-read.
+    """
+    region = comps.get(called)
+    if region is None:
+        return _type_bytes(ins.type_str) + _operand_bytes(ins, comp)
+
+    # map parameter index -> param name; find slice-consumed params
+    param_names: Dict[int, str] = {}
+    ds_result: Dict[str, int] = {}     # param name -> slice bytes
+    dus_target: set = set()            # params that are DUS in-place targets
+    for r in region.instrs:
+        if r.op == "parameter":
+            m = _PARAM_IDX_RE.search(r.line)
+            if m:
+                param_names[int(m.group(1))] = r.name
+    for r in region.instrs:
+        ops_ = r.operands
+        if r.op == "dynamic-slice" and ops_:
+            ds_result[ops_[0]] = _type_bytes(r.type_str)
+        if r.op == "dynamic-update-slice" and ops_:
+            dus_target.add(ops_[0])
+
+    # result bytes: DUS-rooted fusions write only the update slice
+    root = next((r for r in region.instrs if r.is_root), None)
+    seen = 0
+    while root is not None and root.op in ("bitcast", "copy") \
+            and root.operands and seen < 4:
+        nxt = next((r for r in region.instrs
+                    if r.name == root.operands[0]), None)
+        root, seen = nxt, seen + 1
+    if root is not None and root.op == "dynamic-update-slice" \
+            and len(root.operands) >= 2:
+        upd = root.operands[1]
+        result_bytes = _type_bytes(region.sizes.get(upd, ""))
+    else:
+        result_bytes = _type_bytes(ins.type_str)
+
+    total = result_bytes
+    for i, ref in enumerate(ins.operands):
+        if ref not in comp.sizes:
+            continue
+        pname = param_names.get(i)
+        if pname in dus_target:
+            continue                        # in-place target: not re-read
+        if pname in ds_result:
+            total += ds_result[pname]       # only the slice is read
+        else:
+            total += _type_bytes(comp.sizes[ref])
+    return total
+
+
+def _region_cost(comps: Dict[str, Computation], name: str,
+                 cache: Dict[str, HloCost], flops_only: bool = False
+                 ) -> HloCost:
+    key = name + ("#f" if flops_only else "")
+    if key in cache:
+        return cache[key]
+    cost = HloCost()
+    cache[key] = cost                      # break cycles defensively
+    comp = comps.get(name)
+    if comp is None:
+        return cost
+    for ins in comp.instrs:
+        if ins.op == "while":
+            body = _BODY_RE.search(ins.line)
+            cond = _COND_RE.search(ins.line)
+            if body:
+                trips = _trip_count(comps, cond.group(1)) if cond else 1
+                cost.add(_region_cost(comps, body.group(1), cache,
+                                      flops_only).scaled(trips))
+            continue
+        if ins.op == "conditional":
+            bm = _BRANCHES_RE.search(ins.line)
+            if bm:
+                branches = [_region_cost(comps, b.strip().lstrip("%"),
+                                         cache, flops_only)
+                            for b in bm.group(1).split(",")]
+                if branches:
+                    best = max(branches, key=lambda c: c.flops + c.bytes)
+                    cost.add(best)
+            if not flops_only:
+                cost.bytes += _type_bytes(ins.type_str)
+            continue
+        if ins.op in ("fusion", "call"):
+            cm = _CALLS_RE.search(ins.line)
+            if cm:
+                # flops live inside; bytes counted at the fusion boundary
+                inner = _region_cost(comps, cm.group(1), cache,
+                                     flops_only=True)
+                cost.flops += inner.flops
+            if not flops_only:
+                if cm:
+                    cost.bytes += _fusion_bytes(ins, comp, comps,
+                                                cm.group(1))
+                else:
+                    cost.bytes += _type_bytes(ins.type_str) \
+                        + _operand_bytes(ins, comp)
+            continue
+        kind = next((k for k in COLLECTIVE_OPS if ins.op.startswith(k)), None)
+        if kind is not None:
+            ob = _operand_bytes(ins, comp) or _type_bytes(ins.type_str)
+            cost.coll[kind] += ob
+            cost.coll_count += 1
+            if not flops_only:
+                cost.bytes += _type_bytes(ins.type_str) + \
+                    _operand_bytes(ins, comp)
+            continue
+        if ins.op == "dot":
+            cost.flops += _dot_flops(ins, comp)
+        if not flops_only and ins.op not in _BYTES_SKIP:
+            if ins.op == "dynamic-slice":
+                cost.bytes += 2 * _type_bytes(ins.type_str)
+            elif ins.op == "dynamic-update-slice" and len(ins.operands) >= 2:
+                upd = ins.operands[1]
+                cost.bytes += 2 * _type_bytes(comp.sizes.get(upd, ""))
+            else:
+                cost.bytes += _type_bytes(ins.type_str) + \
+                    _operand_bytes(ins, comp)
+    cache[key] = cost
+    return cost
+
+
+def module_cost(hlo_text: str, entry: Optional[str] = None) -> HloCost:
+    comps = parse_module(hlo_text)
+    if not comps:
+        return HloCost()
+    if entry is None:
+        # the ENTRY computation is the one named like main / the last one
+        entry = next((n for n in comps if n.startswith("main")), None) \
+            or list(comps)[-1]
+    return _region_cost(comps, entry, {})
+
+
+def top_cost_lines(hlo_text: str, k: int = 20, by: str = "bytes"):
+    """Profiling aid: the k most expensive instructions, with loop
+    multipliers applied. Returns [(cost, trips, op, line-prefix)]."""
+    comps = parse_module(hlo_text)
+    if not comps:
+        return []
+    entry = next((n for n in comps if n.startswith("main")), None) \
+        or list(comps)[-1]
+    rows = []
+
+    def visit(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            if ins.op == "while":
+                body = _BODY_RE.search(ins.line)
+                cond = _COND_RE.search(ins.line)
+                if body:
+                    trips = _trip_count(comps, cond.group(1)) if cond else 1
+                    visit(body.group(1), mult * trips)
+                continue
+            if ins.op == "conditional":
+                bm = _BRANCHES_RE.search(ins.line)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        visit(b.strip().lstrip("%"), mult)
+                continue
+            if ins.op in ("fusion", "call"):
+                cm = _CALLS_RE.search(ins.line)
+                if by == "flops" and cm:
+                    inner = _region_cost(comps, cm.group(1), {},
+                                         flops_only=True)
+                    if inner.flops:
+                        rows.append((inner.flops * mult, mult, ins.op,
+                                     ins.line[:140]))
+                elif by == "bytes" and cm:
+                    b = _fusion_bytes(ins, comp, comps, cm.group(1))
+                    if b:
+                        rows.append((b * mult, mult, ins.op, ins.line[:140]))
+                continue
+            if by == "flops":
+                if ins.op == "dot":
+                    rows.append((_dot_flops(ins, comp) * mult, mult, ins.op,
+                                 ins.line[:140]))
+            elif ins.op not in _BYTES_SKIP:
+                if ins.op == "dynamic-slice":
+                    b = 2 * _type_bytes(ins.type_str)
+                elif (ins.op == "dynamic-update-slice"
+                      and len(ins.operands) >= 2):
+                    b = 2 * _type_bytes(comp.sizes.get(ins.operands[1], ""))
+                else:
+                    b = _type_bytes(ins.type_str) + _operand_bytes(ins, comp)
+                if b:
+                    rows.append((b * mult, mult, ins.op, ins.line[:140]))
+
+    visit(entry, 1.0)
+    rows.sort(key=lambda r: -r[0])
+    return rows[:k]

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). The single-pod mesh is 16×16 = 256 chips (v5e pod),
+axes (data, model); the multi-pod mesh adds a leading pod axis:
+2×16×16 = 512 chips, axes (pod, data, model). ``pod`` is an outer
+data-parallel axis — gradients reduce hierarchically (fast ICI inside a pod
+first, the slower inter-pod hop once).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests (requires XLA host-device override)."""
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)

@@ -1,0 +1,146 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+  t_compute    = HLO_FLOPs        / (chips × 197e12 FLOP/s bf16)
+  t_memory     = HLO_bytes        / (chips × 819e9  B/s HBM)
+  t_collective = collective_bytes / (chips × 50e9   B/s/link × links)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+collective_bytes is parsed out of the optimized HLO text: we sum the
+*operand* sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (operand sizes are resolved via
+a first pass over instruction definitions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# ---- TPU v5e hardware constants -------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS = 4                # links per chip engaged on a 2D torus (approx)
+
+@dataclasses.dataclass
+class RooflineReport:
+    """All cost figures are PER DEVICE (the SPMD-partitioned module is the
+    per-device program); ``model_flops``/``model_bytes`` are the GLOBAL
+    useful work (bytes = the irreducible HBM traffic: params + caches +
+    optimizer state, read/written once)."""
+    flops: float
+    bytes_accessed: float
+    coll_bytes: Dict[str, int]
+    chips: int
+    model_flops: float = 0.0
+    model_bytes: float = 0.0
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(v for k, v in self.coll_bytes.items()
+                         if k != "count"))
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.total_coll_bytes / (ICI_BW * ICI_LINKS)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO flops (remat/redundancy waste metric)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def t_ideal(self) -> float:
+        """Roofline-ideal step time: the workload's own compute/bandwidth
+        floor (whichever is larger) on perfect hardware utilisation."""
+        return max(self.model_flops / (self.chips * PEAK_FLOPS),
+                   self.model_bytes / (self.chips * HBM_BW))
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal step time / achievable step time (bound by max term)."""
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_ideal / t_bound if t_bound else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.total_coll_bytes,
+            "collectives": {k: v for k, v in self.coll_bytes.items()},
+            "chips": self.chips, "model_flops": self.model_flops,
+            "model_bytes": self.model_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "t_ideal_s": self.t_ideal,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, chips: int, model_flops: float = 0.0,
+            model_bytes: float = 0.0,
+            hlo_text: Optional[str] = None) -> RooflineReport:
+    """Roofline terms from the compiled module.
+
+    Uses the while-aware HLO cost model (``repro.launch.hlo_cost``): the
+    backend's ``cost_analysis()`` counts loop bodies once, which undercounts
+    scan-over-layers models by ~num_layers (verified; see EXPERIMENTS.md
+    §Dry-run methodology). All terms are PER-DEVICE (the module is the
+    SPMD-partitioned program), so `chips` only enters the denominators as
+    already-partitioned work.
+    """
+    from . import hlo_cost
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    mc = hlo_cost.module_cost(text)
+    coll = {k: int(v) for k, v in mc.coll.items()}
+    coll["count"] = int(mc.coll_count)
+    return RooflineReport(flops=mc.flops, bytes_accessed=mc.bytes,
+                          coll_bytes=coll, chips=chips,
+                          model_flops=model_flops, model_bytes=model_bytes)
+
+
+def model_flops_for(cfg, kind: str, batch: int, seq: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (forward) per token, using
+    active params (MoE counts routed top-k + shared only)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = batch * seq
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = batch * seq
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * batch
+
+
+def model_bytes_for(cfg, kind: str, batch: int, seq: int,
+                    param_bytes: float, cache_bytes: float = 0.0) -> float:
+    """Irreducible global HBM traffic per step.
+
+    decode : stream all (LUT/dense) params once + read the KV/state cache
+    prefill: params + write the cache once
+    train  : params fwd+bwd reads + grad write + fp32 Adam m/v read+write
+    """
+    if kind == "decode":
+        return param_bytes + cache_bytes
+    if kind == "prefill":
+        return param_bytes + cache_bytes
+    n_params = param_bytes / 2.0          # bf16 params
+    return 3.0 * param_bytes + 16.0 * n_params

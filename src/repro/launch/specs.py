@@ -1,0 +1,94 @@
+"""Input ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+No device allocation: params/optimizer/batch/cache are all
+``jax.ShapeDtypeStruct`` trees derived with ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut import QuantConfig
+from repro.core.lutboost import precompute_model
+from repro.data.synthetic import make_batch_specs
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.train.trainer import TrainConfig, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train", 4096, 256),
+    "prefill_32k": ShapeCase("prefill", 32768, 32),
+    "decode_32k": ShapeCase("decode", 32768, 128),
+    "long_500k": ShapeCase("decode", 524288, 1),
+}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """long_500k only runs for archs with sub-quadratic structure
+    (SSM/hybrid or sliding-window); see DESIGN.md §Arch-applicability."""
+    if shape_name == "long_500k" and cfg.pure_full_attention:
+        return False, "skipped (pure full-attention arch at 500k context)"
+    return True, ""
+
+
+def batch_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def param_specs(model: Model, qc: QuantConfig):
+    """ShapeDtypeStruct tree of model params (inference LUTs included when
+    qc.mode == lut_infer)."""
+    def build(key):
+        p = model.init(key, qc)
+        if qc.mode == "lut_infer":
+            p = precompute_model(p, qc)
+        return p
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def train_input_specs(model: Model, qc: QuantConfig, case: ShapeCase,
+                      tc: Optional[TrainConfig] = None):
+    """(params, opt_state, batch, step) ShapeDtypeStructs for train_step."""
+    tc = tc or TrainConfig()
+    p_specs = param_specs(model, qc)
+    opt_specs = jax.eval_shape(lambda p: init_opt_state(p, tc), p_specs)
+    batch = make_batch_specs(model.cfg, case.batch, case.seq,
+                             dtype=batch_dtype(model.cfg))
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return p_specs, opt_specs, batch, step
+
+
+def cache_specs(model: Model, batch: int, max_seq: int):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_seq))
+
+
+def serve_input_specs(model: Model, qc: QuantConfig, case: ShapeCase):
+    """Returns (params, inputs..., cache) ShapeDtypeStructs for
+    prefill (kind=prefill) or a single decode step (kind=decode)."""
+    cfg = model.cfg
+    p_specs = param_specs(model, qc)
+    cache = cache_specs(model, case.batch, case.seq)
+    if case.kind == "prefill":
+        batch = make_batch_specs(cfg, case.batch, case.seq,
+                                 dtype=batch_dtype(cfg))
+        batch.pop("labels", None)
+        return p_specs, batch, cache
+    # decode: one new token against a seq-long cache
+    if cfg.family == "audio":
+        tok = jax.ShapeDtypeStruct((case.batch, 1, cfg.d_model),
+                                   batch_dtype(cfg))
+    else:
+        tok = jax.ShapeDtypeStruct((case.batch, 1), jnp.int32)
+    return p_specs, tok, cache

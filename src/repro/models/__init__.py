@@ -1,0 +1,2 @@
+"""Model zoo: every assigned architecture, with LUT-DLA projections."""
+from .config import ModelConfig

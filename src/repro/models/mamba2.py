@@ -1,0 +1,215 @@
+"""Mamba2 block — SSD (state-space duality) chunked algorithm (arXiv:2405.21060).
+
+Train/prefill use the chunked block-decomposition: intra-chunk "attention-like"
+quadratic term + inter-chunk linear state recurrence (associative over chunks).
+Decode is the O(1)-per-token recurrent update on a (B, H, P, N) state.
+
+Projections (in_proj / out_proj) are LutLinear — the dominant FLOPs of an SSM
+block are these dense GEMMs, so LUT-DLA applies directly (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut import QuantConfig
+from .layers import init_proj, proj, rms_norm
+
+Params = Dict
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., l) -> (..., l, l): S[i, j] = sum_{j < k <= i} x[k], -inf above
+    the diagonal. exp(segsum) is the decay matrix L."""
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    l = x.shape[-1]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def init_mamba2(key, cfg, qc: QuantConfig, dtype):
+    d = cfg.d_model
+    din = cfg.d_inner
+    n, g, h = cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    conv_dim = din + 2 * g * n
+    ks = jax.random.split(key, 6)
+    d_in_proj = 2 * din + 2 * g * n + h
+    return {
+        "norm": jnp.zeros((d,), dtype),
+        "in_proj": init_proj(ks[0], d, d_in_proj, qc, dtype=dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim))
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.log(jnp.exp(
+            jnp.linspace(1e-3, 0.1, h)) - 1.0).astype(dtype),  # softplus^-1
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "D": jnp.ones((h,), dtype),
+        "gate_norm": jnp.zeros((din,), dtype),
+        "out_proj": init_proj(ks[2], din, d, qc, dtype=dtype),
+    }
+
+
+def _split_in_proj(zxbcdt, cfg):
+    din = cfg.d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * gn]
+    dt = zxbcdt[..., din + din + 2 * gn:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. xbc (B, S, C), w (K, C).
+
+    state (B, K-1, C) carries the trailing inputs for decode continuity.
+    Returns (out (B, S, C), new_state (B, K-1, C))."""
+    kk = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], kk - 1, xbc.shape[-1]), xbc.dtype)
+    xpad = jnp.concatenate([state, xbc], axis=1)               # (B, S+K-1, C)
+    out = sum(xpad[:, i:i + xbc.shape[1], :] * w[i][None, None]
+              for i in range(kk))
+    new_state = xpad[:, -(kk - 1):, :] if kk > 1 else state
+    return jax.nn.silu(out + b[None, None]), new_state
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, d_skip, chunk: int = 128,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x    (B, S, H, P)   inputs per head
+    dt   (B, S, H)      softplus-ed timestep
+    a_log(H,)           A = -exp(a_log)
+    bmat (B, S, G, N)   input->state projection
+    cmat (B, S, G, N)   state->output projection
+    d_skip (H,)         skip connection
+    h0   (B, H, P, N)   optional initial state
+    Returns (y (B, S, H, P), h_final (B, H, P, N)).
+    """
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nch = x.shape[1] // chunk
+
+    a = (-jnp.exp(a_log.astype(jnp.float32)))[None, None] * dt   # (B, S', H)
+    xw = x * dt[..., None]                                        # dt-weighted
+
+    def r(t, extra=()):  # (B, S', ...) -> (B, nch, chunk, ...)
+        return t.reshape(b, nch, chunk, *t.shape[2:])
+    xc, ac = r(xw), r(a)
+    bc = jnp.repeat(r(bmat), rep, axis=3) if rep > 1 else r(bmat)
+    cc = jnp.repeat(r(cmat), rep, axis=3) if rep > 1 else r(cmat)
+    # with g==h after repeat: (B, nch, chunk, H, N)
+
+    acs = jnp.cumsum(ac, axis=2)                                  # (B,nch,l,H)
+    # 1) intra-chunk (diagonal blocks)
+    dmat = jnp.exp(_segsum(jnp.moveaxis(ac, -1, 2)))              # (B,nch,H,l,l)
+    scores = jnp.einsum("bclhn,bcshn->bchls", cc, bc)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores * dmat, xc)
+    # 2) chunk final states
+    decay_states = jnp.exp(acs[:, :, -1:, :] - acs)               # (B,nch,l,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", bc, decay_states, xc)
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(acs[:, :, -1, :])                       # (B,nch,H)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp                                             # (B,H,P,N),(B,H)
+        hnew = dec[..., None, None] * hprev + st
+        return hnew, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn, h0.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                         # (B,nch,H,P,N)
+    # 4) state->output within chunk
+    state_decay = jnp.exp(acs)                                    # (B,nch,l,H)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", cc,
+                       h_prevs.astype(cc.dtype), state_decay.astype(cc.dtype))
+    y = (y_diag + y_off).reshape(b, nch * chunk, h, p)[:, :s]
+    y = y + x[:, :s] * d_skip[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def mamba2_block(p: Params, x: jax.Array, cfg, qc: QuantConfig,
+                 cache: Optional[Params] = None,
+                 ) -> Tuple[jax.Array, jax.Array, Optional[Params]]:
+    """Full Mamba2 block (train/prefill path). x (B, S, D).
+
+    cache: {"conv": (B, K-1, C), "h": (B, H, P, N)} — carried for prefill
+    continuity and populated for subsequent decode.
+    Returns (out, recon, new_cache).
+    """
+    b, s, d = x.shape
+    h, pdim, n, g = (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state,
+                     cfg.ssm_ngroups)
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt, r1 = proj(p["in_proj"], xn, qc)
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :cfg.d_inner].reshape(b, s, h, pdim)
+    bmat = xbc[..., cfg.d_inner:cfg.d_inner + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., cfg.d_inner + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,S,H)
+    h0 = cache["h"] if cache is not None else None
+    y, h_final = ssd_chunked(xs, dt, p["A_log"], bmat, cmat, p["D"],
+                             chunk=128, h0=h0)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out, r2 = proj(p["out_proj"], y, qc)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "h": h_final}
+    return out, r1 + r2, new_cache
+
+
+def mamba2_decode(p: Params, x: jax.Array, cfg, qc: QuantConfig,
+                  cache: Params) -> Tuple[jax.Array, jax.Array, Params]:
+    """Single-token recurrent step. x (B, 1, D), cache {"conv","h"}."""
+    b, _, d = x.shape
+    h, pdim, n, g = (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state,
+                     cfg.ssm_ngroups)
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt, r1 = proj(p["in_proj"], xn, qc)
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+    # conv via cached window
+    xpad = jnp.concatenate([cache["conv"], xbc], axis=1)        # (B, K, C)
+    kk = p["conv_w"].shape[0]
+    conv_out = jnp.einsum("bkc,kc->bc", xpad[:, -kk:], p["conv_w"])
+    xbc1 = jax.nn.silu(conv_out + p["conv_b"])[:, None]          # (B,1,C)
+    new_conv = xpad[:, -(kk - 1):]
+    xs = xbc1[..., :cfg.d_inner].reshape(b, h, pdim)
+    bmat = xbc1[..., cfg.d_inner:cfg.d_inner + g * n].reshape(b, g, n)
+    cmat = xbc1[..., cfg.d_inner + g * n:].reshape(b, g, n)
+    rep = h // g
+    bmat = jnp.repeat(bmat, rep, axis=1)                         # (B,H,N)
+    cmat = jnp.repeat(cmat, rep, axis=1)
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32)[:, 0]
+                          + p["dt_bias"].astype(jnp.float32))    # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32))[None] * dt1)
+    hs = cache["h"]                                              # (B,H,P,N)
+    hnew = (a[..., None, None] * hs
+            + jnp.einsum("bh,bhp,bhn->bhpn", dt1, xs.astype(jnp.float32),
+                         bmat.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", hnew, cmat.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out, r2 = proj(p["out_proj"], y, qc)
+    return out, r1 + r2, {"conv": new_conv, "h": hnew}

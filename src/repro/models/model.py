@@ -1,0 +1,527 @@
+"""Unified model: one class covering all six assigned architecture families.
+
+Layer stacks are ``jax.lax.scan`` over stacked block parameters (leading
+layer axis) — this keeps HLO size and CPU compile time tractable at
+62-layer × 512-device dry-run scale. Per-layer heterogeneity (gemma3's 5:1
+local:global pattern, zamba2's shared attention block) is expressed as
+per-layer scalars fed through the scan.
+
+API (all functional, params are plain pytrees):
+
+  init(key, qc)                     -> params
+  forward(params, batch, qc)        -> (logits, aux)
+  loss(params, batch, qc)           -> (scalar, metrics)
+  init_cache(batch, max_seq)        -> cache
+  prefill(params, batch, cache, qc) -> (next_logits, cache)
+  decode(params, tokens, cache, qc) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut import DENSE, QuantConfig
+from .config import ModelConfig
+from .layers import (attention, init_attention, init_mlp, mlp, rms_norm)
+from .mamba2 import init_mamba2, mamba2_block, mamba2_decode
+from .moe import init_moe, moe_ffn
+
+Params = Dict[str, Any]
+
+ATTN_FAMILIES = ("dense", "moe", "audio", "vlm")
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    def _init_block(self, key, qc: QuantConfig):
+        cfg, dtype = self.cfg, self.dtype
+        if cfg.family in ("ssm", "hybrid"):
+            return init_mamba2(key, cfg, qc, dtype)
+        ka, kf = jax.random.split(key)
+        block = {"attn": init_attention(ka, cfg, qc, dtype)}
+        if cfg.family == "moe":
+            block["moe"] = init_moe(kf, cfg, qc, dtype)
+        else:
+            block["mlp"] = init_mlp(kf, cfg.d_model, cfg.d_ff, cfg, qc, dtype)
+        return block
+
+    def init(self, key: jax.Array, qc: QuantConfig = DENSE) -> Params:
+        cfg, dtype = self.cfg, self.dtype
+        ke, kb, kh, ks = jax.random.split(key, 4)
+        params: Params = {"final_norm": jnp.zeros((cfg.d_model,), dtype)}
+        if cfg.family != "audio":
+            params["embed"] = (0.02 * jax.random.normal(
+                ke, (cfg.vocab_size, cfg.d_model))).astype(dtype)
+        layer_keys = jax.random.split(kb, cfg.num_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: self._init_block(k, qc))(layer_keys)
+        if cfg.family == "hybrid":
+            ka, km = jax.random.split(ks)
+            params["shared_attn"] = {
+                "attn": init_attention(ka, cfg, qc, dtype),
+                "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg, qc, dtype),
+            }
+        if cfg.family == "audio":
+            params["heads"] = (0.02 * jax.random.normal(
+                kh, (cfg.num_codebooks, cfg.d_model, cfg.vocab_size))
+            ).astype(dtype)
+            # audio inputs are stub frame embeddings; a learned input proj
+            # stands in for the EnCodec codebook-sum embedding.
+            params["in_proj"] = (0.02 * jax.random.normal(
+                ke, (cfg.d_model, cfg.d_model))).astype(dtype)
+        elif not cfg.tie_embeddings:
+            params["head"] = (0.02 * jax.random.normal(
+                kh, (cfg.d_model, cfg.vocab_size))).astype(dtype)
+        return params
+
+    # ------------------------------------------------------------------
+    # embedding / head per family
+    # ------------------------------------------------------------------
+    def _embed(self, params: Params, batch: Dict) -> Tuple[jax.Array, int]:
+        """Returns (x (B, S, D), prefix_len)."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            x = batch["embeds"].astype(self.dtype) @ params["in_proj"]
+            return x, 0
+        if cfg.family == "vlm":
+            tok = params["embed"][batch["tokens"]]
+            patches = batch["patch_embeds"].astype(self.dtype)
+            return jnp.concatenate([patches, tok], axis=1), cfg.num_patches
+        return params["embed"][batch["tokens"]], 0
+
+    def _head(self, params: Params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return jnp.einsum("bsd,qdv->bsqv", x, params["heads"])
+        if cfg.tie_embeddings:
+            return x @ params["embed"].T
+        return x @ params["head"]
+
+    # ------------------------------------------------------------------
+    # per-layer static metadata
+    # ------------------------------------------------------------------
+    def _windows(self) -> jax.Array:
+        cfg = self.cfg
+        return jnp.array(
+            [0 if cfg.layer_is_global(i) else cfg.sliding_window
+             for i in range(cfg.num_layers)], jnp.int32)
+
+    def _attn_slot_list(self):
+        """Hybrid: shared-attention invocation slot per layer (-1 = none)."""
+        cfg = self.cfg
+        slots, s = [], 0
+        for i in range(cfg.num_layers):
+            if cfg.shared_attn_every and (i % cfg.shared_attn_every
+                                          == cfg.shared_attn_every - 1):
+                slots.append(s)
+                s += 1
+            else:
+                slots.append(-1)
+        return slots
+
+    def _attn_slots(self) -> jax.Array:
+        return jnp.array(self._attn_slot_list(), jnp.int32)
+
+    @property
+    def num_attn_slots(self) -> int:
+        return sum(1 for s in self._attn_slot_list() if s >= 0)
+
+    # ------------------------------------------------------------------
+    # block runners
+    # ------------------------------------------------------------------
+    def _run_blocks(self, params: Params, x: jax.Array, qc: QuantConfig,
+                    q_offset, prefix_len,
+                    cache: Optional[Params] = None):
+        """Scan over the layer stack. Returns (x, recon, moe_aux, new_cache)."""
+        cfg = self.cfg
+        windows = self._windows()
+        decode = cache is not None and x.shape[1] == 1
+
+        if cfg.family in ATTN_FAMILIES:
+            # Cache handling [§Perf I3/I5]:
+            #  * decode: the cache is a scan INVARIANT (read-only per-layer
+            #    slices are free); each layer emits only its new-token KV
+            #    slab via ys, and the cache is updated ONCE after the scan.
+            #  * prefill: the cache travels in the carry and each layer
+            #    updates its slice in place — streaming it through xs/ys
+            #    would rebuild the full stacked buffer every layer.
+            # Layer grouping [§Perf I8]: local:global patterns (gemma3) scan
+            # over groups of `global_every` with the window STATIC per
+            # sub-layer, enabling the block-local attention fast path.
+            slab_mode = decode and cfg.head_layout != "hd"
+
+            def layer_fn(h, recon, aux, c_full, p_l, win, li):
+                src = cache if slab_mode else c_full
+                c_l = None
+                if src is not None:
+                    c_l = jax.tree_util.tree_map(
+                        lambda t: jax.lax.dynamic_index_in_dim(
+                            t, li, 0, keepdims=False), src)
+                a, r1, new_c = attention(p_l["attn"], h, cfg, qc,
+                                         q_offset=q_offset, window=win,
+                                         prefix_len=prefix_len, cache=c_l,
+                                         decode_slab=slab_mode)
+                h = h + a
+                if cfg.family == "moe":
+                    f, r2, a2 = moe_ffn(p_l["moe"], h, cfg, qc)
+                    aux = aux + a2
+                else:
+                    f, r2 = mlp(p_l["mlp"], h, cfg, qc)
+                h = h + f
+                slab = None
+                if slab_mode:
+                    slab = new_c
+                elif c_full is not None:
+                    c_full = jax.tree_util.tree_map(
+                        lambda full, upd: jax.lax.dynamic_update_index_in_dim(
+                            full, upd.astype(full.dtype), li, 0),
+                        c_full, new_c)
+                return h, recon + r1 + r2, aux, c_full, slab
+
+            ge = cfg.global_every
+            # grouping pays off where the static window enables the
+            # block-local path (train/prefill); decode keeps the flat scan
+            # (slab path) — grouping there only perturbs fusion patterns.
+            grouped = (ge > 1 and cfg.sliding_window > 0
+                       and cfg.num_layers >= ge and not decode)
+            carry_cache = cache is not None and not slab_mode
+            z0 = jnp.zeros((), jnp.float32)
+
+            if grouped:
+                n_groups, tail = divmod(cfg.num_layers, ge)
+                gp = jax.tree_util.tree_map(
+                    lambda t: t[:n_groups * ge].reshape(
+                        n_groups, ge, *t.shape[1:]), params["blocks"])
+                tail_p = jax.tree_util.tree_map(
+                    lambda t: t[n_groups * ge:], params["blocks"])
+
+                def gbody(carry, xs):
+                    if carry_cache:
+                        h, recon, aux, c_full = carry
+                    else:
+                        h, recon, aux = carry
+                        c_full = None
+                    g_params, gid = xs
+                    slabs = []
+                    for j in range(ge):
+                        p_l = jax.tree_util.tree_map(
+                            lambda t: t[j], g_params)
+                        win = 0 if j == ge - 1 else cfg.sliding_window
+                        li = gid * ge + j
+                        h, recon, aux, c_full, slab = layer_fn(
+                            h, recon, aux, c_full, p_l, win, li)
+                        slabs.append(slab)
+                    ys = (jax.tree_util.tree_map(
+                        lambda *t: jnp.stack(t), *slabs)
+                        if slab_mode else None)
+                    if carry_cache:
+                        return (h, recon, aux, c_full), ys
+                    return (h, recon, aux), ys
+
+                if cfg.remat:
+                    gbody = jax.checkpoint(gbody)
+                gids = jnp.arange(n_groups, dtype=jnp.int32)
+                carry0 = (x, z0, z0, cache) if carry_cache else (x, z0, z0)
+                carry, ys = jax.lax.scan(gbody, carry0, (gp, gids))
+                if carry_cache:
+                    x, recon, aux, new_cache = carry
+                else:
+                    x, recon, aux = carry
+                    new_cache = cache if slab_mode else None
+                slab_list = []
+                if slab_mode and ys is not None:
+                    flat = jax.tree_util.tree_map(
+                        lambda t: t.reshape(-1, *t.shape[2:]), ys)
+                    slab_list.append(flat)
+                # tail layers (num_layers % global_every), unscanned
+                c_full = new_cache if carry_cache else None
+                for j in range(tail):
+                    li = n_groups * ge + j
+                    p_l = jax.tree_util.tree_map(lambda t: t[j], tail_p)
+                    win = 0 if cfg.layer_is_global(li) else \
+                        cfg.sliding_window
+                    x, recon, aux, c_full, slab = layer_fn(
+                        x, recon, aux, c_full, p_l, win, jnp.int32(li))
+                    if slab_mode:
+                        slab_list.append(jax.tree_util.tree_map(
+                            lambda t: t[None], slab))
+                if carry_cache:
+                    new_cache = c_full
+                if slab_mode:
+                    slabs = jax.tree_util.tree_map(
+                        lambda *t: jnp.concatenate(t, 0), *slab_list)
+                    new_cache = {
+                        key: jax.lax.dynamic_update_slice_in_dim(
+                            cache[key], slabs[key].astype(cache[key].dtype),
+                            q_offset, axis=2)
+                        for key in ("k", "v")}
+                return x, recon, aux, new_cache
+
+            def body(carry, xs):
+                if carry_cache:
+                    h, recon, aux, c_full = carry
+                else:
+                    h, recon, aux = carry
+                    c_full = None
+                p_l, win, li = xs
+                h, recon, aux, c_full, slab = layer_fn(
+                    h, recon, aux, c_full, p_l, win, li)
+                if carry_cache:
+                    return (h, recon, aux, c_full), slab
+                return (h, recon, aux), slab
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            layer_ids = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+            xs = (params["blocks"], windows, layer_ids)
+            carry0 = (x, z0, z0, cache) if carry_cache else (x, z0, z0)
+            carry, slabs = jax.lax.scan(body, carry0, xs)
+            if carry_cache:
+                x, recon, aux, new_cache = carry
+                return x, recon, aux, new_cache
+            x, recon, aux = carry
+            if slab_mode:
+                new_cache = {
+                    key: jax.lax.dynamic_update_slice_in_dim(
+                        cache[key], slabs[key], q_offset, axis=2)
+                    for key in ("k", "v")}
+                return x, recon, aux, new_cache
+            return x, recon, aux, None
+
+        # ssm / hybrid. Mamba states are FULLY replaced every step, so the
+        # optimal cache movement is xs/ys streaming (one read + one write of
+        # each layer's state); carry-DUS would rebuild the stacked buffer
+        # per layer. (The attention KV cache is the opposite case — see the
+        # slab path above.) [§Perf I7]
+        slots = self._attn_slots() if cfg.family == "hybrid" else None
+        shared = params.get("shared_attn")
+
+        def body(carry, xs):
+            if cfg.family == "hybrid":
+                h, recon, aux, attn_cache = carry
+                if cache is None:
+                    p_l, slot, li = xs
+                    c_l = None
+                else:
+                    p_l, slot, li, c_l = xs
+            else:
+                h, recon, aux = carry
+                attn_cache = None
+                if cache is None:
+                    p_l, li = xs
+                    c_l = None
+                else:
+                    p_l, li, c_l = xs
+            if decode:
+                o, r, new_c = mamba2_decode(p_l, h, cfg, qc, c_l)
+            else:
+                o, r, new_c = mamba2_block(p_l, h, cfg, qc, c_l)
+            h = h + o
+            recon = recon + r
+
+            if cfg.family == "hybrid":
+                # decode: attn cache is read-only; each invocation emits a
+                # new-token slab through ys (zeros on non-attn layers), and
+                # the slot rows are written back once after the scan. [I5b]
+                slab_mode = decode and attn_cache is not None \
+                    and cfg.head_layout != "hd"
+
+                def with_attn(operand):
+                    h, attn_cache, recon = operand
+                    if attn_cache is None:
+                        c_a = None
+                    else:
+                        c_a = jax.tree_util.tree_map(
+                            lambda t: jax.lax.dynamic_index_in_dim(
+                                t, jnp.maximum(slot, 0), 0, keepdims=False),
+                            attn_cache)
+                    a, r1, new_a = attention(shared["attn"], h, cfg, qc,
+                                             q_offset=q_offset, window=0,
+                                             prefix_len=prefix_len, cache=c_a,
+                                             decode_slab=slab_mode)
+                    h = h + a
+                    f, r2 = mlp(shared["mlp"], h, cfg, qc)
+                    h = h + f
+                    if attn_cache is not None and not slab_mode:
+                        attn_cache = jax.tree_util.tree_map(
+                            lambda full, upd: jax.lax.dynamic_update_index_in_dim(
+                                full, upd.astype(full.dtype),
+                                jnp.maximum(slot, 0), 0),
+                            attn_cache, new_a)
+                    if slab_mode:
+                        return h, attn_cache, recon + r1 + r2, new_a
+                    return h, attn_cache, recon + r1 + r2, None
+
+                def no_attn(operand):
+                    h, attn_cache, recon = operand
+                    if slab_mode:
+                        b = h.shape[0]
+                        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+                        dt = attn_cache["k"].dtype
+                        zero_slab = {
+                            "k": jnp.zeros((b, 1, kvh, hd), dt),
+                            "v": jnp.zeros((b, 1, kvh, hd), dt)}
+                        return h, attn_cache, recon, zero_slab
+                    return h, attn_cache, recon, None
+
+                h, attn_cache, recon, slab = jax.lax.cond(
+                    slot >= 0, with_attn, no_attn, (h, attn_cache, recon))
+                return (h, recon, aux, attn_cache), (new_c, slab)
+            return (h, recon, aux), new_c
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+
+        z0 = jnp.zeros((), jnp.float32)
+        layer_ids = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+        if cfg.family == "hybrid":
+            attn_cache0 = cache["attn"] if cache is not None else None
+            xs = (params["blocks"], slots, layer_ids)
+            if cache is not None:
+                xs = xs + (cache["mamba"],)
+            (x, recon, aux, attn_cache), (new_mamba, slabs) = jax.lax.scan(
+                body, (x, z0, z0, attn_cache0), xs)
+            if decode and attn_cache0 is not None \
+                    and cfg.head_layout != "hd":
+                # gather the slab rows at the attn layers (static indices)
+                # and write all slots' new-token KV in one update
+                slot_layers = jnp.array(
+                    [i for i, s in enumerate(self._attn_slot_list())
+                     if s >= 0], jnp.int32)
+                attn_cache = {
+                    key: jax.lax.dynamic_update_slice_in_dim(
+                        attn_cache0[key],
+                        slabs[key][slot_layers].astype(
+                            attn_cache0[key].dtype),
+                        q_offset, axis=2)
+                    for key in ("k", "v")}
+            new_cache = (None if cache is None
+                         else {"mamba": new_mamba, "attn": attn_cache})
+            return x, recon, aux, new_cache
+
+        xs = (params["blocks"], layer_ids)
+        if cache is not None:
+            xs = xs + (cache,)
+        (x, recon, aux), new_cache = jax.lax.scan(body, (x, z0, z0), xs)
+        return x, recon, aux, new_cache
+
+    # ------------------------------------------------------------------
+    # train forward + loss
+    # ------------------------------------------------------------------
+    def forward(self, params: Params, batch: Dict, qc: QuantConfig = DENSE):
+        x, prefix_len = self._embed(params, batch)
+        x, recon, moe_aux, _ = self._run_blocks(
+            params, x, qc, q_offset=0, prefix_len=prefix_len)
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        logits = self._head(params, x)
+        return logits, {"recon": recon, "moe_aux": moe_aux}
+
+    def loss(self, params: Params, batch: Dict, qc: QuantConfig = DENSE):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, qc)
+        if cfg.family == "audio":
+            labels = batch["labels"]                    # (B, S, Q)
+            lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+            nll = -jnp.take_along_axis(
+                lp, labels[:, 1:, :, None], axis=-1)[..., 0]
+            ce = jnp.mean(nll)
+        elif cfg.family == "vlm":
+            # loss only over the text region (after the image prefix)
+            p = cfg.num_patches
+            text_logits = logits[:, p - 1:-1]           # predicts tokens
+            labels = batch["tokens"]
+            lp = jax.nn.log_softmax(text_logits.astype(jnp.float32), -1)
+            nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+            ce = jnp.mean(nll)
+        else:
+            labels = batch["tokens"][:, 1:]
+            lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+            nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+            ce = jnp.mean(nll)
+        total = (ce + qc.recon_weight * aux["recon"]
+                 + 0.01 * aux["moe_aux"])
+        metrics = {"ce": ce, "recon": aux["recon"], "moe_aux": aux["moe_aux"],
+                   "loss": total}
+        return total, metrics
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_seq: int,
+                   dtype=None) -> Params:
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        l, b, t = cfg.num_layers, batch_size, max_seq
+        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        pos = jnp.zeros((), jnp.int32)
+        if cfg.family in ATTN_FAMILIES:
+            return {"layers": {
+                "k": jnp.zeros((l, b, t, kvh, hd), dtype),
+                "v": jnp.zeros((l, b, t, kvh, hd), dtype)},
+                "pos": pos}
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        mamba = {
+            "conv": jnp.zeros((l, b, cfg.ssm_conv - 1, conv_dim), dtype),
+            "h": jnp.zeros((l, b, cfg.ssm_nheads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32)}
+        if cfg.family == "ssm":
+            return {"layers": mamba, "pos": pos}
+        n_inv = self.num_attn_slots
+        return {"layers": {
+            "mamba": mamba,
+            "attn": {"k": jnp.zeros((n_inv, b, t, kvh, hd), dtype),
+                     "v": jnp.zeros((n_inv, b, t, kvh, hd), dtype)}},
+            "pos": pos}
+
+    def prefill(self, params: Params, batch: Dict, cache: Params,
+                qc: QuantConfig = DENSE):
+        """Process the prompt; returns (next-token logits (B, V...), cache)."""
+        x, prefix_len = self._embed(params, batch)
+        s = x.shape[1]
+        x, _, _, new_layers = self._run_blocks(
+            params, x, qc, q_offset=0, prefix_len=prefix_len,
+            cache=cache["layers"])
+        x = rms_norm(x[:, -1:], params["final_norm"], self.cfg.norm_eps)
+        logits = self._head(params, x)[:, 0]
+        return logits, {"layers": new_layers,
+                        "pos": jnp.asarray(s, jnp.int32)}
+
+    def decode(self, params: Params, tokens: jax.Array, cache: Params,
+               qc: QuantConfig = DENSE):
+        """One decode step. tokens (B, 1) int32 (audio: embeds (B, 1, D);
+        vlm: text token ids). Returns (logits (B, V...), cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        if cfg.family == "audio":
+            x = tokens.astype(self.dtype) @ params["in_proj"]
+        else:
+            x = params["embed"][tokens]
+        x, _, _, new_layers = self._run_blocks(
+            params, x, qc, q_offset=pos, prefix_len=0, cache=cache["layers"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x)[:, 0]
+        return logits, {"layers": new_layers, "pos": pos + 1}
+
+
+@functools.lru_cache(maxsize=None)
+def _registry():
+    from repro import configs
+    return configs.REGISTRY
+
+
+def build_model(cfg_or_name) -> Model:
+    if isinstance(cfg_or_name, str):
+        cfg_or_name = _registry()[cfg_or_name]()
+    return Model(cfg_or_name)

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts FFN with top-k routing + optional shared experts.
+
+Dispatch uses the capacity-slotted formulation (MaxText/Switch style): each
+(token, choice) is assigned a slot within its expert's capacity buffer via a
+cumulative one-hot count; tokens overflowing capacity are dropped. The expert
+buffers are sharded on the expert dimension across the ``model`` mesh axis
+(expert parallelism) — GSPMD turns the dispatch/combine einsums into
+all-to-alls.
+
+Expert FFNs support LUT-DLA quantisation with *per-expert* codebooks and
+LUTs (shape (E, nc, c, v) / (E, nc, c, N)) — the paper's technique extended
+to the MoE family (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut import QuantConfig
+from repro.core.similarity import ste_quantize_subspaces
+from repro.kernels import ref as kref
+from .layers import rms_norm
+
+Params = Dict
+
+
+def init_expert_proj(key, e: int, k: int, n: int, qc: QuantConfig, dtype):
+    kw, kz = jax.random.split(key)
+    p = {"w": (jax.random.normal(kw, (e, k, n)) / (k ** 0.5)).astype(dtype)}
+    if qc.is_lut:
+        nc = k // qc.v
+        p["z"] = (0.02 * jax.random.normal(kz, (e, nc, qc.c, qc.v))
+                  ).astype(dtype)
+    return p
+
+
+def expert_proj(p: Params, x: jax.Array, qc: QuantConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Batched per-expert projection. x (E, Cap, K) -> (E, Cap, N).
+
+    Mirrors ``lut_linear_apply`` but vmapped over the expert dimension.
+    """
+    zero = jnp.zeros((), jnp.float32)
+    if qc.mode == "dense" or "z" not in p:
+        return jnp.einsum("ecd,edf->ecf", x, p["w"]), zero
+    e, cap, k = x.shape
+    xs = x.reshape(e, cap, k // qc.v, qc.v)
+    if qc.mode == "lut_train":
+        x_hat = jax.vmap(
+            lambda xx, zz: ste_quantize_subspaces(xx, zz, qc.metric)
+        )(xs, p["z"]).reshape(e, cap, k).astype(x.dtype)
+        out_q = jnp.einsum("ecd,edf->ecf", x_hat, p["w"])
+        out_d = jnp.einsum("ecd,edf->ecf", x, p["w"])
+        sg = jax.lax.stop_gradient
+        recon = (jnp.mean((sg(out_q) - out_d) ** 2)
+                 + jnp.mean((out_q - sg(out_d)) ** 2)).astype(jnp.float32)
+        return out_d + sg(out_q - out_d), recon
+    # lut_infer
+    lut = p.get("lut")
+    if lut is None:
+        lut = jax.vmap(lambda w, z: jnp.einsum(
+            "kcv,kvn->kcn", z.astype(jnp.float32),
+            w.reshape(z.shape[0], qc.v, -1).astype(jnp.float32)))(
+                p["w"], p["z"])
+    idx = jax.vmap(lambda xx, zz: kref.assign_ref(xx, zz, qc.metric))(xs, p["z"])
+    out = jax.vmap(lambda ii, ll: kref.lut_gemm_onehot(ii, ll))(idx, lut)
+    return out.astype(x.dtype), zero
+
+
+def init_moe(key, cfg, qc: QuantConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.num_experts
+    ks = jax.random.split(key, 8)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) / (d ** 0.5)).astype(dtype),
+        "wg": init_expert_proj(ks[1], e, d, f, qc, dtype),
+        "wu": init_expert_proj(ks[2], e, d, f, qc, dtype),
+        "wd": init_expert_proj(ks[3], e, f, d, qc, dtype),
+        "norm": jnp.zeros((d,), dtype),
+    }
+    if cfg.num_shared_experts:
+        se = cfg.num_shared_experts
+        p["shared_wg"] = init_expert_proj(ks[4], se, d, f, qc, dtype)
+        p["shared_wu"] = init_expert_proj(ks[5], se, d, f, qc, dtype)
+        p["shared_wd"] = init_expert_proj(ks[6], se, f, d, qc, dtype)
+    return p
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg, qc: QuantConfig
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routed MoE. x (B, S, D) -> (out, recon, aux_loss).
+
+    aux_loss is the standard load-balancing loss (mean_e f_e * p_e * E).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    tokens = xn.reshape(b * s, d)
+    t = b * s
+
+    logits = (tokens @ p["router"].astype(tokens.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)           # renormalise
+
+    # load-balancing aux loss
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    onehot_any = jax.nn.one_hot(gate_idx, e).sum(1)            # (T, E)
+    ce = jnp.mean(onehot_any, axis=0) / k
+    aux = e * jnp.sum(me * ce)
+
+    # capacity: standard cf·T·k/E for large T; floored so that tiny-T
+    # regimes (decode steps) are drop-free (cap == T guarantees no drop).
+    cap = int(cfg.capacity_factor * t * k / e)
+    cap = min(t, max(cap, 8))
+
+    # slot assignment: position of each (token, choice) within its expert
+    oh = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)          # (T, k, E)
+    flat_oh = oh.reshape(t * k, e)
+    pos_in_e = jnp.cumsum(flat_oh, axis=0) - flat_oh           # (T*k, E)
+    slot = jnp.sum(pos_in_e * flat_oh, axis=-1)                # (T*k,)
+    eid = gate_idx.reshape(t * k)
+    keep = slot < cap
+    gates_flat = gate_vals.reshape(t * k) * keep
+
+    # dispatch: scatter tokens into (E, Cap, D) buffers
+    tok_rep = jnp.repeat(tokens, k, axis=0)                    # (T*k, D)
+    slot_c = jnp.where(keep, slot, cap - 1)
+    buf = jnp.zeros((e, cap, d), tokens.dtype)
+    buf = buf.at[eid, slot_c].add(tok_rep * keep[:, None].astype(tokens.dtype))
+
+    # expert computation (per-expert SwiGLU, LUT-capable)
+    g, r1 = expert_proj(p["wg"], buf, qc)
+    u, r2 = expert_proj(p["wu"], buf, qc)
+    y, r3 = expert_proj(p["wd"], jax.nn.silu(g) * u, qc)       # (E, Cap, D)
+
+    # combine: gather each (token, choice)'s result, weight, sum over k
+    out_flat = y[eid, slot_c] * gates_flat[:, None].astype(y.dtype)
+    out = jnp.sum(out_flat.reshape(t, k, d), axis=1)
+
+    recon = r1 + r2 + r3
+    # shared experts (deepseek-moe): always-on, summed
+    if "shared_wg" in p:
+        se = p["shared_wg"]["w"].shape[0]
+        xin = jnp.broadcast_to(tokens[None], (se, t, d))
+        sg_, r4 = expert_proj(p["shared_wg"], xin, qc)
+        su, r5 = expert_proj(p["shared_wu"], xin, qc)
+        sy, r6 = expert_proj(p["shared_wd"], jax.nn.silu(sg_) * su, qc)
+        out = out + jnp.sum(sy, axis=0)
+        recon = recon + r4 + r5 + r6
+
+    return out.reshape(b, s, d), recon, aux.astype(jnp.float32)

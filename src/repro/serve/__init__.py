@@ -1,0 +1,2 @@
+"""Serving: batched request engine over prefill/decode steps."""
+from .engine import Engine, Request

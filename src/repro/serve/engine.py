@@ -1,0 +1,106 @@
+"""Batched serving engine.
+
+Continuous-batching-lite: requests are grouped into fixed-size batches,
+prefilled together (right-padded), then decoded step-by-step with per-slot
+completion tracking. Works with sharded params/caches (pass `shardings`).
+Sampling: greedy or temperature.
+
+The paper's technique enters through ``qc``: with ``mode="lut_infer"`` the
+engine runs assignment + LUT lookups instead of dense GEMMs (precomputed
+tables must already be in params — see ``repro.core.precompute_model``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lut import DENSE, QuantConfig
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model, params, qc: QuantConfig = DENSE,
+                 batch_size: int = 8, max_seq: int = 512,
+                 eos_id: Optional[int] = None, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.qc = qc
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.key = jax.random.PRNGKey(seed)
+
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill(p, b, c, qc))
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode(p, t, c, qc),
+            donate_argnums=(2,))
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve all requests (in batches of `batch_size`)."""
+        for i in range(0, len(requests), self.batch_size):
+            self._run_batch(requests[i:i + self.batch_size])
+        return requests
+
+    def _run_batch(self, reqs: List[Request]) -> None:
+        b = len(reqs)
+        pad_b = self.batch_size
+        max_prompt = max(len(r.tokens) for r in reqs)
+        toks = np.zeros((pad_b, max_prompt), np.int32)
+        for j, r in enumerate(reqs):
+            # left-pad? right-align prompts so decode starts uniformly
+            toks[j, max_prompt - len(r.tokens):] = r.tokens
+        cache = self.model.init_cache(pad_b, self.max_seq)
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, cache)
+
+        active = np.ones(pad_b, bool)
+        active[b:] = False
+        max_new = max(r.max_new_tokens for r in reqs)
+        temp = reqs[0].temperature
+        next_tok = self._sample(logits, temp)
+        for step in range(max_new):
+            np_tok = np.asarray(next_tok)
+            for j, r in enumerate(reqs):
+                if active[j] and not r.done:
+                    t = int(np_tok[j])
+                    r.out_tokens.append(t)
+                    if (self.eos_id is not None and t == self.eos_id) or \
+                            len(r.out_tokens) >= r.max_new_tokens:
+                        r.done = True
+                        active[j] = False
+            if not active[:b].any():
+                break
+            logits, cache = self._decode(
+                self.params, jnp.asarray(np_tok)[:, None], cache)
+            next_tok = self._sample(logits, temp)
+        for r in reqs:
+            r.done = True
+
+
+def greedy_generate(model, params, prompt_tokens, n_new: int,
+                    qc: QuantConfig = DENSE, max_seq: int = 256):
+    """Convenience one-shot generation (tests/examples)."""
+    eng = Engine(model, params, qc, batch_size=1, max_seq=max_seq)
+    req = Request(tokens=list(prompt_tokens), max_new_tokens=n_new)
+    eng.run([req])
+    return req.out_tokens

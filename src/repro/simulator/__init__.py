@@ -1,0 +1,3 @@
+"""Cycle-approximate simulator of the LUT-DLA accelerator."""
+from .cycle_sim import (LutDlaSim, PqaSim, simulate_gemm, simulate_network,
+                        BERT_BASE_LAYERS, RESNET18_LAYERS)

@@ -1,0 +1,3 @@
+"""Training substrate: optimizer, trainer, gradient compression."""
+from .optimizer import adamw_init, adamw_update, clip_by_global_norm, cosine_lr
+from .trainer import TrainConfig, Trainer, make_train_step

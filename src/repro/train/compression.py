@@ -1,0 +1,64 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 1000+-node scale the gradient all-reduce over the slow inter-pod links
+dominates step time. Two standard mitigations, both implemented here:
+
+* **bf16 all-reduce with error feedback** — gradients are cast to bf16
+  before the reduction; the per-leaf fp32 residual (what the cast dropped)
+  is carried in an error-feedback buffer and added back before the next
+  cast, so the compression error does not accumulate (Karimireddy et al.).
+* **Hierarchical reduction** — reduce-scatter/all-gather over the fast
+  intra-pod ``data`` axis and a single all-reduce over the slow ``pod``
+  axis. Under pjit, expressing the gradient reduction as psum over
+  ("data",) then psum over ("pod",) lets XLA schedule the intra-pod part
+  first and overlap the cross-pod part with the optimizer; when not inside
+  shard_map (the usual pjit train step) GSPMD derives the same hierarchy
+  from the mesh axis order.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_compress(grads, ef_state) -> Tuple[Any, Any]:
+    """Cast grads to bf16 with error feedback. Returns (bf16 grads, new_ef).
+
+    ef_state: fp32 pytree (same structure) of residuals; pass None to init.
+    """
+    if ef_state is None:
+        ef_state = jax.tree_util.tree_map(
+            lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads)
+
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        compressed = corrected.astype(jnp.bfloat16)
+        new_e = corrected - compressed.astype(jnp.float32)
+        return compressed, new_e
+
+    pairs = jax.tree_util.tree_map(leaf, grads, ef_state)
+    comp = jax.tree_util.tree_map(
+        lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree_util.tree_map(
+        lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    return comp, new_ef
+
+
+def decompress(grads):
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32), grads)
+
+
+def psum_hierarchical(grads, data_axis: str = "data",
+                      pod_axis: str = "pod"):
+    """Inside shard_map: two-level gradient reduction (intra-pod first)."""
+    g = jax.tree_util.tree_map(
+        lambda t: jax.lax.psum(t, axis_name=data_axis), grads)
+    try:
+        g = jax.tree_util.tree_map(
+            lambda t: jax.lax.psum(t, axis_name=pod_axis), g)
+    except NameError:
+        pass  # single-pod mesh: no pod axis bound
+    return g

@@ -1,0 +1,82 @@
+"""AdamW optimizer + LR schedules, implemented directly in JAX.
+
+State is a plain pytree {"m": ..., "v": ..., "count": scalar} so it
+checkpoints/reshards with the same machinery as parameters. Supports a
+trainable mask (LUTBoost stage-② centroid-only training) applied to the
+update, so frozen leaves keep zero moments and identical values.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.0,
+                 mask: Optional[Any] = None) -> Tuple[Any, dict]:
+    """One AdamW step. Returns (new_params, new_state).
+
+    mask: optional pytree of bools — False leaves are left untouched
+    (gradients zeroed AND moments frozen), used by LUTBoost stage ②.
+    """
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def leaf_update(g, m, v, p, keep):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        update = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        if keep is not None:
+            m_new = jnp.where(keep, m_new, m)
+            v_new = jnp.where(keep, v_new, v)
+            p_new = jnp.where(keep, p_new, p)
+        return m_new, v_new, p_new
+
+    if mask is None:
+        flat = jax.tree_util.tree_map(
+            lambda g, m, v, p: leaf_update(g, m, v, p, None),
+            grads, state["m"], state["v"], params)
+    else:
+        flat = jax.tree_util.tree_map(
+            lambda g, m, v, p, k: leaf_update(g, m, v, p, k),
+            grads, state["m"], state["v"], params, mask)
+    m_new = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    v_new = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    p_new = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return p_new, {"m": m_new, "v": v_new, "count": count}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+        grads), norm
+
+
+def cosine_lr(step, base_lr: float, warmup: int, total: int,
+              min_ratio: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = base_lr * jnp.minimum(1.0, step / jnp.maximum(warmup, 1))
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, base_lr * cos)

@@ -1,0 +1,201 @@
+"""Training loop: LUTBoost-staged train step + fault-tolerant driver.
+
+``make_train_step`` builds the pure step function (grad-accum microbatching,
+AdamW, gradient clipping, optional bf16+error-feedback gradient compression,
+LUTBoost stage masking). The caller jits it with shardings (see
+``repro.launch.train``) — the function itself is mesh-agnostic.
+
+``Trainer`` is the driver: deterministic resumable data, checkpoint/restart,
+NaN/loss-spike detection with batch skip (flaky-node proxy), and a step-time
+watchdog (straggler telemetry).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.core.lut import QuantConfig
+from repro.core.lutboost import LutBoostSchedule, stage_mask
+from .compression import ef_compress
+from .optimizer import adamw_init, adamw_update, clip_by_global_norm, cosine_lr
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    total_steps: int = 1000
+    lr: float = 3e-4
+    warmup: int = 100
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    microbatches: int = 1              # gradient accumulation
+    compress_grads: bool = False       # bf16 all-reduce + error feedback
+    checkpoint_every: int = 200
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    loss_spike_factor: float = 10.0    # skip batches whose loss spikes
+    seed: int = 0
+
+
+def make_train_step(model, qc: QuantConfig, tc: TrainConfig,
+                    stage: int = 3) -> Callable:
+    """Returns step_fn(params, opt_state, batch, step) -> (params, opt, metrics).
+
+    stage: LUTBoost stage (2 = centroids only, 3 = joint). Ignored in dense
+    mode. The function is pure — jit/pjit it at the call site.
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, qc)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step_fn(params, opt_state, batch, step):
+        if tc.microbatches > 1:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(tc.microbatches, b // tc.microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree_util.tree_map(reshape, batch)
+
+            def accum(carry, mb):
+                gsum, lsum = carry
+                loss, _, g = grads_of(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros((), jnp.float32)), micro)
+            inv = 1.0 / tc.microbatches
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+            loss = loss_sum * inv
+            metrics = {"loss": loss}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if tc.compress_grads:
+            grads, new_ef = ef_compress(grads, opt_state.get("ef"))
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        else:
+            new_ef = opt_state.get("ef")
+
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        lr = cosine_lr(step, tc.lr, tc.warmup, tc.total_steps)
+        mask = None
+        if qc.is_lut and stage == 2:
+            mask = stage_mask(params, 2)
+        new_params, new_adam = adamw_update(
+            grads, opt_state["adam"], params, lr,
+            weight_decay=tc.weight_decay, mask=mask)
+        new_opt = {"adam": new_adam}
+        if new_ef is not None:
+            new_opt["ef"] = new_ef
+        metrics = dict(metrics)
+        metrics.update({"grad_norm": gnorm, "lr": lr, "loss": loss})
+        return new_params, new_opt, metrics
+
+    return step_fn
+
+
+def init_opt_state(params, tc: TrainConfig) -> Dict[str, Any]:
+    opt: Dict[str, Any] = {"adam": adamw_init(params)}
+    if tc.compress_grads:
+        opt["ef"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return opt
+
+
+class Trainer:
+    """Fault-tolerant training driver (single-host or per-host in SPMD)."""
+
+    def __init__(self, model, dataset, qc: QuantConfig, tc: TrainConfig,
+                 checkpoint_dir: Optional[str] = None,
+                 lutboost: Optional[LutBoostSchedule] = None,
+                 log_fn: Callable[[str], None] = print):
+        self.model = model
+        self.dataset = dataset
+        self.qc = qc
+        self.tc = tc
+        self.lutboost = lutboost
+        self.log = log_fn
+        self.ckpt = (CheckpointManager(checkpoint_dir, tc.keep_checkpoints)
+                     if checkpoint_dir else None)
+        self._steps = {}
+
+    def _step_fn(self, stage: int):
+        if stage not in self._steps:
+            self._steps[stage] = jax.jit(
+                make_train_step(self.model, self.qc, self.tc, stage))
+        return self._steps[stage]
+
+    def _stage(self, step: int) -> int:
+        if self.lutboost is None or not self.qc.is_lut:
+            return 3
+        return self.lutboost.stage(step)
+
+    def run(self, params, opt_state=None, start_step: int = 0,
+            num_steps: Optional[int] = None) -> Tuple[Any, Any, Dict]:
+        tc = self.tc
+        if opt_state is None:
+            opt_state = init_opt_state(params, tc)
+
+        # resume from the latest checkpoint if present
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            (params, opt_state), step0, extra = self.ckpt.restore(
+                (params, opt_state))
+            start_step = step0
+            self.log(f"[trainer] resumed from step {start_step}")
+
+        end = (start_step + num_steps if num_steps is not None
+               else tc.total_steps)
+        history = {"loss": [], "step_time": []}
+        ema_loss = None
+        step = start_step
+        while step < end:
+            batch = self.dataset.batch(step)
+            stage = self._stage(step)
+            t0 = time.perf_counter()
+            new_params, new_opt, metrics = self._step_fn(stage)(
+                params, opt_state, batch, jnp.asarray(step, jnp.int32))
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+
+            # fault tolerance: NaN or loss spike -> drop update, skip batch
+            if not jnp.isfinite(loss) or (
+                    ema_loss is not None
+                    and loss > tc.loss_spike_factor * ema_loss):
+                self.log(f"[trainer] step {step}: bad loss {loss:.4f} "
+                         f"(ema {ema_loss}), skipping batch")
+                step += 1
+                continue
+            params, opt_state = new_params, new_opt
+            ema_loss = loss if ema_loss is None else \
+                0.95 * ema_loss + 0.05 * loss
+            history["loss"].append(loss)
+            history["step_time"].append(dt)
+
+            if step % tc.log_every == 0:
+                self.log(f"[trainer] step {step} stage {stage} "
+                         f"loss {loss:.4f} ({dt*1e3:.1f} ms)")
+            if self.ckpt is not None and step > start_step and \
+                    step % tc.checkpoint_every == 0:
+                self.ckpt.save(step, (params, opt_state),
+                               extra={"ema_loss": ema_loss})
+            step += 1
+
+        if self.ckpt is not None:
+            self.ckpt.save(step, (params, opt_state),
+                           extra={"ema_loss": ema_loss})
+        return params, opt_state, history

@@ -1,0 +1,30 @@
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+# Tests run on the default 1-device CPU backend. Distributed tests spawn
+# subprocesses with XLA_FLAGS set (never set globally here — see dryrun.py).
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def run_in_devices(code: str, n_devices: int = 4, timeout: int = 600):
+    """Run a python snippet in a subprocess with N host CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}")
+    return res.stdout

@@ -1,0 +1,139 @@
+"""Distributed tests (subprocess with N host devices): sharded train/serve,
+pipeline parallelism, hlo_cost collective accounting, dry-run cell."""
+import pytest
+
+from conftest import run_in_devices
+
+
+def test_sharded_train_step_all_families():
+    out = run_in_devices("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import SMOKE_REGISTRY
+from repro.models.model import Model
+from repro.core.lut import QuantConfig
+from repro.parallel.sharding import param_pspecs, batch_pspecs
+from repro.train.trainer import TrainConfig, make_train_step, init_opt_state
+from repro.data import SyntheticDataset
+
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+shard = lambda t: jax.tree_util.tree_map(
+    lambda s: NamedSharding(mesh, s), t, is_leaf=lambda s: isinstance(s, P))
+qc = QuantConfig(mode="lut_train", v=4, c=8, impl="ref")
+for name in ["qwen1.5-4b", "dbrx-132b", "mamba2-2.7b", "zamba2-1.2b"]:
+    cfg = SMOKE_REGISTRY[name]()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0), qc)
+    pspec = param_pspecs(params, cfg, model_axis_size=2)
+    params = jax.device_put(params, shard(pspec))
+    ds = SyntheticDataset(cfg, global_batch=4, seq_len=16)
+    tc = TrainConfig()
+    opt = init_opt_state(params, tc)
+    step = jax.jit(make_train_step(m, qc, tc),
+        in_shardings=(shard(pspec),
+                      shard({"adam": {"m": pspec, "v": pspec, "count": P()}}),
+                      shard(batch_pspecs(cfg, ("data",))),
+                      NamedSharding(mesh, P())))
+    p2, o2, met = step(params, opt, ds.batch(0), jnp.zeros((), jnp.int32))
+    assert bool(jnp.isfinite(met["loss"])), name
+    print(name, "OK", float(met["loss"]))
+""")
+    assert out.count("OK") == 4
+
+
+def test_sharded_serve_batched_and_sp():
+    out = run_in_devices("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import SMOKE_REGISTRY
+from repro.models.model import Model
+from repro.core.lut import QuantConfig
+from repro.core import precompute_model
+from repro.parallel.sharding import param_pspecs, cache_pspecs
+
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+shard = lambda t: jax.tree_util.tree_map(
+    lambda s: NamedSharding(mesh, s), t, is_leaf=lambda s: isinstance(s, P))
+qc = QuantConfig(mode="lut_infer", v=4, c=8, impl="ref", lut_dtype="int8")
+for name in ["gemma3-27b", "zamba2-1.2b"]:
+    for B in [4, 1]:
+        cfg = SMOKE_REGISTRY[name]()
+        m = Model(cfg)
+        params = precompute_model(m.init(jax.random.PRNGKey(0), qc), qc)
+        pspec = param_pspecs(params, cfg, model_axis_size=2)
+        params = jax.device_put(params, shard(pspec))
+        cspec = cache_pspecs(cfg, B, mesh, ("data",))
+        cache = jax.device_put(m.init_cache(B, 32), shard(cspec))
+        batch = {"tokens": jnp.ones((B, 8), jnp.int32)}
+        lg, cache = jax.jit(lambda p, b, c: m.prefill(p, b, c, qc),
+                            in_shardings=(shard(pspec), None, shard(cspec)),
+                            out_shardings=(None, shard(cspec)))(params, batch, cache)
+        lg, cache = jax.jit(lambda p, t, c: m.decode(p, t, c, qc),
+                            in_shardings=(shard(pspec), None, shard(cspec)),
+                            out_shardings=(None, shard(cspec)))(params, jnp.ones((B,1), jnp.int32), cache)
+        assert bool(jnp.all(jnp.isfinite(lg.astype(jnp.float32))))
+        print(name, B, "OK")
+""")
+    assert out.count("OK") == 4
+
+
+def test_pipeline_parallelism_matches_sequential():
+    out = run_in_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.parallel.pipeline import run_pipeline
+mesh = jax.make_mesh((4,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,))
+key = jax.random.PRNGKey(0)
+ws = jax.random.normal(key, (4, 32, 32)) / 32**0.5
+block = lambda w, x: jax.nn.gelu(x @ w)
+x = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
+ref = x
+for i in range(4):
+    ref = block(ws[i], ref)
+out = run_pipeline(mesh, block, ws, x, n_micro=8)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+print("PIPE OK")
+""")
+    assert "PIPE OK" in out
+
+
+def test_hlo_cost_counts_loop_collectives():
+    out = run_in_devices("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.hlo_cost import module_cost
+mesh = jax.make_mesh((4,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+def g(x, ws):
+    def body(c, w): return jnp.tanh(c @ w), None
+    return jax.lax.scan(body, x, ws)[0]
+X = jax.ShapeDtypeStruct((128, 512), jnp.float32)
+WS = jax.ShapeDtypeStruct((6, 512, 512), jnp.float32)
+c = jax.jit(g, in_shardings=(NamedSharding(mesh, P(None, "model")),
+                             NamedSharding(mesh, P(None, "model", None))),
+            out_shardings=NamedSharding(mesh, P(None, "model"))
+            ).lower(X, WS).compile()
+cost = module_cost(c.as_text())
+# 6 all-reduces of 128x512 f32 = 1.572 MB total; flops = 6 sharded matmuls
+assert abs(cost.coll["all-reduce"] - 6*128*512*4) < 1e-6, cost.coll
+assert cost.coll_count == 6
+assert abs(cost.flops - 6*2*128*128*512) / (6*2*128*128*512) < 0.01
+print("HLOCOST OK")
+""")
+    assert "HLOCOST OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_production_mesh():
+    """One full-size cell on the 16x16 production mesh (the real thing)."""
+    out = run_in_devices("""
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+mesh = make_production_mesh()
+res = run_cell("yi-9b", "decode_32k", mesh, "lut", verbose=False)
+assert res["status"] == "ok", res
+assert res["roofline"]["flops_per_device"] > 0
+assert res["roofline"]["bottleneck"] in ("compute", "memory", "collective")
+print("CELL OK", res["roofline"]["bottleneck"])
+""", n_devices=512, timeout=900)
+    assert "CELL OK" in out

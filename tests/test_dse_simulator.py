@@ -1,0 +1,182 @@
+"""DSE analytical models (paper Eqs 1-5, Table I), search, PPA, simulator."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.dse.models import (DataflowOrder, LutDlaPoint, compute_model,
+                              dataflow_memory, imm_resources, memory_model,
+                              parallelism_model)
+from repro.dse.ppa import (PPA_TABLE, design_ppa, dpe_cost,
+                           efficiency_curves, scale_to_node)
+from repro.dse.search import SearchConstraints, co_design_search
+from repro.simulator.cycle_sim import (BERT_BASE_LAYERS, LutDlaSim, PqaSim,
+                                       RESNET18_LAYERS, simulate_network)
+
+TABLE1_PT = LutDlaPoint(v=4, c=32, bits_lut=8, bits_out=8, tile_n=32)
+
+
+class TestTableI:
+    """Paper Table I (M=512, K=N=768, v=4, c=32): exact cell reproduction
+    for the LS / KNM / KMN / MKN rows (int8 psums+LUT entries, T_n=32)."""
+
+    def _row(self, order):
+        return dataflow_memory(512, 768, 768, TABLE1_PT, order)
+
+    def test_lut_stationary_total_17_3kb(self):
+        r = self._row(DataflowOrder.LS)
+        assert r["scratchpad_kb"] == pytest.approx(16.0)
+        assert r["indices_kb"] == pytest.approx(0.3125, rel=1e-2)
+        assert r["psum_lut_kb"] == pytest.approx(1.0)
+        assert r["total_kb"] == pytest.approx(17.3, abs=0.1)
+
+    def test_knm_385kb(self):
+        r = self._row(DataflowOrder.KNM)
+        assert r["total_kb"] == pytest.approx(385.3, abs=0.2)
+
+    def test_kmn_408kb(self):
+        r = self._row(DataflowOrder.KMN)
+        assert r["scratchpad_kb"] == pytest.approx(384.0)
+        assert r["psum_lut_kb"] == pytest.approx(24.0)
+
+    def test_mkn_scratch(self):
+        r = self._row(DataflowOrder.MKN)
+        assert r["scratchpad_kb"] == pytest.approx(0.75)
+
+    def test_ls_is_smallest(self):
+        totals = {o: self._row(o)["total_kb"] for o in DataflowOrder}
+        assert min(totals, key=totals.get) == DataflowOrder.LS
+        # >100x smaller than the LUT-resident orders
+        assert totals[DataflowOrder.MNK] / totals[DataflowOrder.LS] > 100
+
+
+class TestAnalyticalModels:
+    def test_compute_model_eq1(self):
+        pt = LutDlaPoint(v=8, c=16, metric="l2")
+        r = compute_model(512, 768, 768, pt)
+        assert r["op_sim"] == 2 * 16 * 512 * 768          # alpha·c·M·K
+        assert r["op_add"] == 512 * 768 * 96              # M·N·(K/v)
+        assert r["speedup_ops"] > 1
+
+    def test_l1_cheaper_than_l2(self):
+        l2 = compute_model(512, 768, 768, LutDlaPoint(v=8, c=16, metric="l2"))
+        l1 = compute_model(512, 768, 768, LutDlaPoint(v=8, c=16, metric="l1"))
+        assert l1["op_sim"] < l2["op_sim"]
+
+    def test_memory_model_eq2(self):
+        pt = LutDlaPoint(v=8, c=16, bits_lut=8, bits_out=32)
+        r = memory_model(512, 768, 768, pt)
+        assert r["mem_lut"] == 768 * 16 * 96 * 8
+        assert r["mem_idx"] == 96 * 512 * 4               # ceil(log2 16)=4
+
+    def test_parallelism_model_eq5_bound_shifts(self):
+        pt1 = LutDlaPoint(v=4, c=32, n_ccu=1, n_imm=1)
+        r1 = parallelism_model(4096, 768, 768, pt1, 683.0)
+        assert r1["bound"] == "lut"          # lookup dominates at n_imm=1
+        pt2 = LutDlaPoint(v=4, c=32, n_ccu=1, n_imm=64)
+        r2 = parallelism_model(4096, 768, 768, pt2, 683.0)
+        assert r2["omega"] < r1["omega"]
+
+    def test_imm_resources_table7_exact(self):
+        """Paper Table VII SRAM: exact on all three designs."""
+        for (v, c, tn, m), sram in [((3, 16, 128, 256), 36.1),
+                                    ((4, 16, 256, 256), 72.1),
+                                    ((3, 16, 768, 512), 408.2)]:
+            r = imm_resources(v=v, c=c, tile_n=tn, m=m)
+            assert r["sram_kb"] == pytest.approx(sram, rel=0.01), (v, c, tn)
+
+    def test_design_ppa_reproduces_table8(self):
+        """Calibrated PPA model: exact on the paper's three designs."""
+        from repro.dse.models import LutDlaPoint as PT
+        paper = [(PT(v=3, c=16, tile_n=128, n_imm=6), 0.755, 219.57, 460.8,
+                  256),
+                 (PT(v=4, c=16, tile_n=256, n_imm=8), 1.701, 314.975, 1228.8,
+                  256),
+                 (PT(v=3, c=16, tile_n=768, n_imm=6), 3.64, 496.4, 2764.8,
+                  512)]
+        for pt, area, power, gops, m_rows in paper:
+            d = design_ppa(pt, m_rows=m_rows)
+            assert d.perf_gops == pytest.approx(gops, rel=1e-3)
+            assert d.area_mm2 == pytest.approx(area, rel=0.03), pt
+            assert d.power_mw == pytest.approx(power, rel=0.03), pt
+
+
+class TestSearch:
+    def test_search_returns_feasible_point(self):
+        best, stats = co_design_search(SearchConstraints())
+        assert best is not None
+        assert best.area_mm2 <= 4.0 and best.power_mw <= 500.0
+        assert stats["total"] > 0
+        assert stats["pruned_memory"] + stats["pruned_compute"] > 0
+
+    def test_tighter_area_never_improves_omega(self):
+        loose, _ = co_design_search(SearchConstraints(max_area_mm2=4.0))
+        tight, _ = co_design_search(SearchConstraints(max_area_mm2=1.0))
+        if tight is not None:
+            assert tight.omega >= loose.omega - 1e-6
+
+    @settings(max_examples=10, deadline=None)
+    @given(area=st.floats(0.5, 8.0), power=st.floats(100.0, 900.0))
+    def test_search_respects_constraints(self, area, power):
+        best, _ = co_design_search(SearchConstraints(
+            max_area_mm2=area, max_power_mw=power))
+        if best is not None:
+            assert best.area_mm2 <= area + 1e-9
+            assert best.power_mw <= power + 1e-9
+
+
+class TestPPA:
+    def test_dpe_cost_ordering(self):
+        """Paper Fig 9: chebyshev < l1 < l2 in area and energy."""
+        for field in ("area_um2", "energy_pj"):
+            l2 = dpe_cost(8, "l2")[field]
+            l1 = dpe_cost(8, "l1")[field]
+            ch = dpe_cost(8, "chebyshev")[field]
+            assert ch < l1 < l2
+
+    def test_dpe_cost_grows_with_v(self):
+        a = [dpe_cost(v, "l2")["area_um2"] for v in (2, 4, 8, 16)]
+        assert a == sorted(a)
+
+    def test_lut_dla_beats_alu_efficiency(self):
+        """Paper Fig 1: LUT-based points beat the int8 ALU on both axes for
+        aggressive (v, c)."""
+        rows = efficiency_curves()
+        alu_int8 = next(r for r in rows if r["name"] == "int8")
+        best_lut = max((r for r in rows if r["kind"] == "lut"),
+                       key=lambda r: r["ops_per_um2"])
+        assert best_lut["ops_per_um2"] > alu_int8["ops_per_um2"]
+
+    def test_paper_designs_efficiency(self):
+        """Table VIII: LUT-DLA designs dominate NVDLA in area efficiency."""
+        d3 = PPA_TABLE["LUT-DLA-3"]
+        nv = PPA_TABLE["NVDLA-Large"]
+        assert (d3["gops"] / d3["area"]) / (nv["gops"] / nv["area"]) > 1.5
+
+    def test_scale_to_node(self):
+        a100 = scale_to_node(PPA_TABLE["A100"], 28)
+        assert a100.area_mm2 > PPA_TABLE["A100"]["area"]   # 7nm -> 28nm grows
+
+
+class TestSimulator:
+    def test_calibration_table9(self):
+        pt = LutDlaPoint(v=4, c=32, tile_n=128, bits_lut=8)
+        r = LutDlaSim(pt).gemm_cycles(512, 768, 768)
+        assert r["cycles"] == pytest.approx(4743e3, rel=0.02)
+        assert r["onchip_kb"] == pytest.approx(10.5, rel=0.1)
+        rp = PqaSim(pt).gemm_cycles(512, 768, 768)
+        assert rp["cycles"] / r["cycles"] == pytest.approx(1.66, rel=0.15)
+        assert rp["onchip_kb"] > 100 * r["onchip_kb"]
+
+    def test_ls_hides_loads_at_adequate_bandwidth(self):
+        pt = LutDlaPoint(v=4, c=32, tile_n=128)
+        r = LutDlaSim(pt, bw_gbs=25.6).gemm_cycles(512, 768, 768)
+        assert r["stall_cycles"] == 0.0
+        r_slow = LutDlaSim(pt, bw_gbs=0.05).gemm_cycles(512, 768, 768)
+        assert r_slow["stall_cycles"] > 0
+
+    def test_network_sims_run(self):
+        pt = LutDlaPoint(v=4, c=16, tile_n=128, n_imm=4)
+        for layers in (RESNET18_LAYERS, BERT_BASE_LAYERS):
+            r = simulate_network(layers, pt)
+            assert r["time_s"] > 0 and r["gops"] > 0

@@ -1,0 +1,117 @@
+"""Pallas kernel tests: shape/dtype sweeps + allclose vs the pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.assign import vq_assign_pallas
+from repro.kernels.lut_gemm import lut_gemm_pallas
+from repro.kernels.ops import lut_matmul, vq_assign
+
+METRICS = ["l2", "l1", "chebyshev"]
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("m,nc,v,c", [
+    (32, 8, 4, 16), (64, 12, 8, 8), (128, 4, 16, 32), (16, 3, 5, 7),
+])
+def test_assign_kernel_matches_ref(metric, m, nc, v, c):
+    key = jax.random.PRNGKey(m * nc + v)
+    x = jax.random.normal(key, (m, nc, v))
+    z = jax.random.normal(jax.random.fold_in(key, 1), (nc, c, v))
+    i_ref = ref.assign_ref(x, z, metric)
+    i_pl = vq_assign_pallas(x, z, metric, block_m=16, block_k=4,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_pl))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_assign_kernel_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (24, 6, 8)).astype(dtype)
+    z = jax.random.normal(jax.random.fold_in(key, 1), (6, 16, 8)).astype(dtype)
+    i_pl = vq_assign_pallas(x, z, "l2", interpret=True)
+    i_ref = ref.assign_ref(x.astype(jnp.float32), z.astype(jnp.float32), "l2")
+    # bf16 may flip ties/near-ties: allow tiny disagreement rate
+    agree = np.mean(np.asarray(i_pl) == np.asarray(i_ref))
+    assert agree > 0.97, agree
+
+
+@pytest.mark.parametrize("m,nc,c,n", [
+    (32, 8, 16, 64), (64, 12, 8, 96), (17, 5, 7, 33), (128, 16, 32, 256),
+])
+def test_lut_gemm_kernel_matches_ref(m, nc, c, n):
+    key = jax.random.PRNGKey(m + n)
+    idx = jax.random.randint(key, (m, nc), 0, c, jnp.int32)
+    lut = jax.random.normal(jax.random.fold_in(key, 1), (nc, c, n))
+    o_ref = ref.lut_gemm_ref(idx, lut)
+    o_pl = lut_gemm_pallas(idx, lut, block_m=16, block_n=32, block_k=4,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pl),
+                               rtol=1e-5, atol=1e-5)
+    o_oh = ref.lut_gemm_onehot(idx, lut)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_oh),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lut_gemm_int8_scale_path():
+    key = jax.random.PRNGKey(2)
+    m, nc, c, n = 48, 6, 16, 80
+    idx = jax.random.randint(key, (m, nc), 0, c, jnp.int32)
+    lut = jax.random.normal(jax.random.fold_in(key, 1), (nc, c, n))
+    scale = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (n,))) + .05
+    lut8 = jnp.clip(jnp.round(lut / scale * 16), -127, 127).astype(jnp.int8)
+    o_ref = ref.lut_gemm_onehot(idx, lut8, scale / 16)
+    o_pl = lut_gemm_pallas(idx, lut8, scale / 16, block_m=16, block_n=16,
+                           block_k=3, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pl),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 40), nc=st.integers(1, 10), c=st.integers(2, 20),
+       n=st.integers(1, 70), seed=st.integers(0, 999))
+def test_lut_gemm_property_random_shapes(m, nc, c, n, seed):
+    key = jax.random.PRNGKey(seed)
+    idx = jax.random.randint(key, (m, nc), 0, c, jnp.int32)
+    lut = jax.random.normal(jax.random.fold_in(key, 1), (nc, c, n))
+    o_ref = ref.lut_gemm_ref(idx, lut)
+    o_pl = lut_gemm_pallas(idx, lut, block_m=8, block_n=32, block_k=4,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pl),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ops_dispatch_ref_on_cpu():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 4, 4))
+    z = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 4))
+    idx = vq_assign(x, z, "l2")                 # auto -> ref on CPU
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.asarray(ref.assign_ref(x, z, "l2")))
+    lut = jax.random.normal(key, (4, 8, 16))
+    out = lut_matmul(idx, lut)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.lut_gemm_ref(idx, lut)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_assign_then_lookup_equals_quantized_matmul():
+    """System identity: assign+lookup == (quantized activations) @ W."""
+    key = jax.random.PRNGKey(1)
+    m, k, n, v, c = 32, 24, 40, 4, 8
+    nc = k // v
+    x = jax.random.normal(key, (m, k))
+    z = jax.random.normal(jax.random.fold_in(key, 1), (nc, c, v))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (k, n))
+    from repro.core.lut import build_lut
+    from repro.core.similarity import ste_quantize_subspaces
+    lut = build_lut(w, z)
+    idx = vq_assign(x.reshape(m, nc, v), z, "l2")
+    out_lut = lut_matmul(idx, lut)
+    x_hat = ste_quantize_subspaces(x.reshape(m, nc, v), z, "l2")
+    out_dense = x_hat.reshape(m, k) @ w
+    np.testing.assert_allclose(np.asarray(out_lut), np.asarray(out_dense),
+                               rtol=2e-4, atol=2e-4)

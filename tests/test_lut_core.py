@@ -1,0 +1,156 @@
+"""LUT construction, LutLinear modes, LUTBoost conversion pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QuantConfig, build_lut, convert, kmeans_codebook,
+                        lut_linear_apply, lut_linear_init, precompute_layer,
+                        precompute_model, quantize_lut_int8,
+                        stage_mask, apply_mask, strip_for_inference)
+from repro.core.codebook import CodebookSpec
+
+
+def test_build_lut_matches_explicit(rng):
+    k, n, v, c = 16, 12, 4, 8
+    nc = k // v
+    w = jax.random.normal(rng, (k, n))
+    z = jax.random.normal(jax.random.PRNGKey(1), (nc, c, v))
+    lut = build_lut(w, z)
+    for kk in range(nc):
+        for j in range(c):
+            expect = z[kk, j] @ w[kk * v:(kk + 1) * v]
+            np.testing.assert_allclose(np.asarray(lut[kk, j]),
+                                       np.asarray(expect), rtol=1e-5,
+                                       atol=1e-5)
+
+
+def test_quantize_lut_int8_error_bound(rng):
+    lut = jax.random.normal(rng, (6, 8, 20)) * 3.0
+    lut8, scale = quantize_lut_int8(lut)
+    recon = lut8.astype(jnp.float32) * scale[None, None, :]
+    err = jnp.abs(recon - lut)
+    # error per entry bounded by scale/2 (symmetric rounding)
+    assert float(jnp.max(err - scale[None, None, :] / 2)) < 1e-6
+
+
+def test_equivalent_bits():
+    assert CodebookSpec(v=8, c=16).equivalent_bits == 0.5
+    assert CodebookSpec(v=3, c=8).equivalent_bits == 1.0
+    assert CodebookSpec(v=9, c=8).equivalent_bits == pytest.approx(1 / 3)
+
+
+def test_kmeans_reduces_distortion(rng):
+    spec = CodebookSpec(v=4, c=8)
+    acts = jax.random.normal(rng, (256, 16))
+    z0 = kmeans_codebook(acts, 16, spec, iters=1, key=rng)
+    z10 = kmeans_codebook(acts, 16, spec, iters=12, key=rng)
+
+    def distortion(z):
+        from repro.core.similarity import pairwise_distance_subspaces
+        d = pairwise_distance_subspaces(acts.reshape(-1, 4, 4), z, "l2")
+        return float(jnp.mean(jnp.min(d, -1)))
+
+    assert distortion(z10) <= distortion(z0) + 1e-6
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1", "chebyshev"])
+def test_lut_linear_modes_consistent(metric, rng):
+    qc_t = QuantConfig(mode="lut_train", v=4, c=16, metric=metric)
+    p = lut_linear_init(rng, 16, 24, qc_t, bias=True)
+    x = jax.random.normal(jax.random.PRNGKey(2), (10, 16))
+    out_t, recon = lut_linear_apply(p, x, qc_t)
+    assert out_t.shape == (10, 24) and float(recon) > 0
+    qc_i = QuantConfig(mode="lut_infer", v=4, c=16, metric=metric, impl="ref")
+    pi = precompute_layer(p, qc_i)
+    out_i, zero = lut_linear_apply(pi, x, qc_i)
+    np.testing.assert_allclose(np.asarray(out_t), np.asarray(out_i),
+                               rtol=2e-4, atol=2e-4)
+    assert float(zero) == 0.0
+
+
+def test_paper_mode_gradients_use_dense_path(rng):
+    """Paper §V-2: backward uses A·W — dW must equal Aᵀg (not Âᵀg)."""
+    qc = QuantConfig(mode="lut_train", v=4, c=4, metric="l2",
+                     task_grad_to_centroids=False, recon_weight=0.0)
+    p = lut_linear_init(rng, 8, 6, qc)
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, 8))
+
+    def loss(w):
+        out, _ = lut_linear_apply({**p, "w": w}, x, qc)
+        return jnp.sum(out)
+
+    gw = jax.grad(loss)(p["w"])
+    expect = x.T @ jnp.ones((5, 6))
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_centroids_get_gradient_only_via_recon(rng):
+    qc = QuantConfig(mode="lut_train", v=4, c=4, metric="l2",
+                     task_grad_to_centroids=False)
+    p = lut_linear_init(rng, 8, 6, qc)
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, 8))
+
+    def task_only(z):
+        out, _ = lut_linear_apply({**p, "z": z}, x, qc)
+        return jnp.sum(out)
+
+    def with_recon(z):
+        out, recon = lut_linear_apply({**p, "z": z}, x, qc)
+        return jnp.sum(out) + recon
+
+    gz_task = jax.grad(task_only)(p["z"])
+    gz_recon = jax.grad(with_recon)(p["z"])
+    np.testing.assert_allclose(np.asarray(gz_task), 0.0, atol=1e-7)
+    assert float(jnp.max(jnp.abs(gz_recon))) > 0
+
+
+def test_stage_mask_and_apply(rng):
+    qc = QuantConfig(mode="lut_train", v=4, c=4)
+    params = {"a": lut_linear_init(rng, 8, 8, qc),
+              "norm": jnp.zeros((8,))}
+    m2 = stage_mask(params, 2)
+    assert m2["a"]["z"] is True
+    assert m2["a"]["w"] is False and m2["norm"] is False
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+    masked = apply_mask(grads, m2)
+    assert float(jnp.sum(masked["a"]["w"])) == 0.0
+    assert float(jnp.sum(masked["a"]["z"])) > 0
+    m3 = stage_mask(params, 3)
+    assert all(jax.tree_util.tree_leaves(m3))
+
+
+def test_convert_runs_kmeans_on_captured_activations(rng):
+    qc = QuantConfig(mode="lut_train", v=4, c=8)
+    params = {"fc": lut_linear_init(rng, 16, 8, qc)}
+
+    def fwd(p, x):
+        return lut_linear_apply(p["fc"], x, qc.replace(mode="lut_train"))[0]
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (64, 16)) * 5.0
+    z_before = params["fc"]["z"]
+    params2 = convert(fwd, params, x, qc)
+    # centroids moved to the activation scale (std 5), not init scale 0.02
+    assert float(jnp.std(params2["fc"]["z"])) > 1.0
+    assert float(jnp.std(z_before)) < 0.1
+
+
+def test_strip_for_inference():
+    qc = QuantConfig(mode="lut_infer", v=4, c=4)
+    p = lut_linear_init(jax.random.PRNGKey(0), 8, 8,
+                        qc.replace(mode="lut_train"))
+    pi = precompute_layer(p, qc)
+    stripped = strip_for_inference(pi)
+    assert "w" not in stripped and "lut" in stripped and "z" in stripped
+
+
+def test_precompute_model_handles_stacked_and_expert_dims(rng):
+    qc = QuantConfig(mode="lut_infer", v=4, c=4)
+    stacked = {"w": jax.random.normal(rng, (3, 8, 6)),
+               "z": jax.random.normal(rng, (3, 2, 4, 4))}
+    experts = {"w": jax.random.normal(rng, (3, 5, 8, 6)),
+               "z": jax.random.normal(rng, (3, 5, 2, 4, 4))}
+    out = precompute_model({"a": stacked, "b": experts}, qc)
+    assert out["a"]["lut"].shape == (3, 2, 4, 6)
+    assert out["b"]["lut"].shape == (3, 5, 2, 4, 6)

@@ -1,0 +1,154 @@
+"""HLO cost model, roofline report math, sharding-rule validity,
+block-local attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_REGISTRY, get_smoke_config
+from repro.core.lut import QuantConfig
+from repro.launch import roofline as rl
+from repro.launch.hlo_cost import module_cost, parse_module
+from repro.models.layers import _sdpa, _sdpa_local
+from repro.models.model import Model
+from repro.parallel.sharding import param_pspecs
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- hlo_cost
+def test_scan_flops_counted_with_trip_multiplier():
+    def g(a, bs):
+        return jax.lax.scan(lambda c, b: (c @ b, None), a, bs)[0]
+    A = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    BS = jax.ShapeDtypeStruct((7, 32, 32), jnp.float32)
+    c = jax.jit(g).lower(A, BS).compile()
+    cost = module_cost(c.as_text())
+    expect = 7 * 2 * 64 * 32 * 32
+    assert abs(cost.flops - expect) / expect < 0.01
+
+
+def test_nested_scan_flops():
+    def g(a, bs):
+        def outer(c, b):
+            def inner(ci, _):
+                return ci @ b, None
+            return jax.lax.scan(inner, c, None, length=3)[0], None
+        return jax.lax.scan(outer, a, bs)[0]
+    A = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    BS = jax.ShapeDtypeStruct((5, 16, 16), jnp.float32)
+    c = jax.jit(g).lower(A, BS).compile()
+    cost = module_cost(c.as_text())
+    expect = 5 * 3 * 2 * 16 ** 3
+    assert abs(cost.flops - expect) / expect < 0.01
+
+
+def test_parse_module_finds_computations():
+    f = jax.jit(lambda x: jnp.tanh(x) @ x.T)
+    c = f.lower(jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
+    comps = parse_module(c.as_text())
+    assert any(n.startswith("main") for n in comps)
+
+
+# ---------------------------------------------------------------- roofline
+def test_roofline_report_terms_and_bottleneck():
+    rep = rl.RooflineReport(
+        flops=197e12, bytes_accessed=819e9 * 2,
+        coll_bytes={"all-reduce": int(50e9 * 4 * 0.5)}, chips=4,
+        model_flops=4 * 197e12 * 0.25, model_bytes=0.0)
+    assert rep.t_compute == pytest.approx(1.0)
+    assert rep.t_memory == pytest.approx(2.0)
+    assert rep.t_collective == pytest.approx(0.5)
+    assert rep.bottleneck == "memory"
+    assert rep.roofline_fraction == pytest.approx(0.25 / 2.0)
+    d = rep.to_dict()
+    assert d["bottleneck"] == "memory"
+
+
+def test_model_flops_and_bytes_for():
+    cfg = get_smoke_config("qwen1.5-4b")
+    n = cfg.active_param_count()
+    assert rl.model_flops_for(cfg, "train", 4, 16) == 6.0 * n * 64
+    assert rl.model_flops_for(cfg, "decode", 4, 16) == 2.0 * n * 4
+    mb = rl.model_bytes_for(cfg, "decode", 4, 16, param_bytes=100.0,
+                            cache_bytes=10.0)
+    assert mb == 110.0
+
+
+# ---------------------------------------------------------------- sharding
+@pytest.mark.parametrize("name", list(SMOKE_REGISTRY))
+def test_param_pspecs_rank_matches_leaves(name):
+    cfg = SMOKE_REGISTRY[name]()
+    m = Model(cfg)
+    qc = QuantConfig(mode="lut_train", v=4, c=8)
+    params = jax.eval_shape(lambda k: m.init(k, qc), KEY)
+    specs = param_pspecs(params, cfg, model_axis_size=4)
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    spec_map = {jax.tree_util.keystr(p): s for p, s in
+                jax.tree_util.tree_leaves_with_path(
+                    specs, is_leaf=lambda s: isinstance(
+                        s, jax.sharding.PartitionSpec))}
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        spec = spec_map[key]
+        assert len(spec) <= leaf.ndim, (key, spec, leaf.shape)
+        # any model-axis dim must divide
+        for i, ax in enumerate(spec):
+            if ax == "model":
+                assert leaf.shape[i] % 4 == 0, (key, spec, leaf.shape)
+
+
+def test_vocab_fallback_replication():
+    """mamba2's vocab (50280) doesn't divide 16 — embed must replicate."""
+    cfg = SMOKE_REGISTRY["mamba2-2.7b"]().replace(vocab_size=50280)
+    m = Model(cfg)
+    params = jax.eval_shape(lambda k: m.init(k), KEY)
+    specs = param_pspecs(params, cfg, model_axis_size=16)
+    assert specs["embed"] == jax.sharding.PartitionSpec(None, None)
+    specs4 = param_pspecs(params, cfg, model_axis_size=4)
+    assert specs4["embed"] == jax.sharding.PartitionSpec("model", None)
+
+
+# -------------------------------------------------------- local attention
+@pytest.mark.parametrize("s,w", [(32, 8), (64, 16), (48, 8)])
+def test_block_local_equals_naive_window(s, w):
+    b, h, kvh, d = 2, 4, 2, 8
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kvh, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kvh, d))
+    out_naive = _sdpa(q, k, v, 0, w, 0, impl="naive")
+    out_local = _sdpa_local(q, k, v, w)
+    np.testing.assert_allclose(np.asarray(out_naive), np.asarray(out_local),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_grouped_scan_equals_flat_scan():
+    """gemma3-style grouped forward == the same model's flat forward."""
+    cfg = get_smoke_config("gemma3-27b").replace(
+        attn_impl="naive", num_layers=8, global_every=3, sliding_window=8)
+    m = Model(cfg)
+    params = m.init(KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    out_grouped, _ = m.forward(params, {"tokens": toks})
+    # flat path: disable grouping by zeroing sliding_window pattern via
+    # global_every=0 but same per-layer windows through cfg trickery is
+    # not possible; instead compare against layer-by-layer manual apply.
+    from repro.models.layers import attention, mlp, rms_norm
+    x = params["embed"][toks]
+    for i in range(cfg.num_layers):
+        p_l = jax.tree_util.tree_map(lambda t: t[i], params["blocks"])
+        win = 0 if cfg.layer_is_global(i) else cfg.sliding_window
+        a, _, _ = attention(p_l["attn"], x, cfg, m_qc(), window=win)
+        x = x + a
+        f, _ = mlp(p_l["mlp"], x, cfg, m_qc())
+        x = x + f
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits_manual = x @ params["embed"].T
+    np.testing.assert_allclose(np.asarray(out_grouped),
+                               np.asarray(logits_manual),
+                               rtol=3e-4, atol=3e-4)
+
+
+def m_qc():
+    from repro.core.lut import DENSE
+    return DENSE

@@ -1,0 +1,111 @@
+"""Unit + property tests for similarity metrics and STE quantisation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.similarity import (assign, assign_subspaces,
+                                   pairwise_distance,
+                                   pairwise_distance_subspaces,
+                                   soft_assignment, ste_quantize,
+                                   ste_quantize_subspaces)
+
+METRICS = ["l2", "l1", "chebyshev"]
+
+
+def _brute(x, z, metric):
+    diff = np.abs(x[:, None, :] - z[None])
+    if metric == "l2":
+        return (diff ** 2).sum(-1)
+    if metric == "l1":
+        return diff.sum(-1)
+    return diff.max(-1)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_pairwise_matches_bruteforce(metric, rng):
+    x = jax.random.normal(rng, (17, 6))
+    z = jax.random.normal(jax.random.PRNGKey(1), (9, 6))
+    d = pairwise_distance(x, z, metric)
+    np.testing.assert_allclose(np.asarray(d),
+                               _brute(np.asarray(x), np.asarray(z), metric),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 24), c=st.integers(1, 12), v=st.integers(1, 9),
+       metric=st.sampled_from(METRICS), seed=st.integers(0, 2**16))
+def test_assign_is_argmin(m, c, v, metric, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (m, v))
+    z = jax.random.normal(jax.random.fold_in(key, 1), (c, v))
+    idx = np.asarray(assign(x, z, metric))
+    brute = _brute(np.asarray(x), np.asarray(z), metric).argmin(-1)
+    np.testing.assert_array_equal(idx, brute)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_distances_nonnegative_and_self_zero(metric, rng):
+    z = jax.random.normal(rng, (5, 4))
+    d = pairwise_distance(z, z, metric)
+    assert float(jnp.min(d)) >= -1e-6
+    np.testing.assert_allclose(np.asarray(jnp.diagonal(d)), 0.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_ste_forward_is_nearest_centroid(metric, rng):
+    x = jax.random.normal(rng, (11, 4))
+    z = jax.random.normal(jax.random.PRNGKey(3), (7, 4))
+    xh = ste_quantize(x, z, metric)
+    idx = assign(x, z, metric)
+    np.testing.assert_allclose(np.asarray(xh), np.asarray(z[idx]), rtol=1e-6)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_ste_gradient_straight_through(metric, rng):
+    x = jax.random.normal(rng, (8, 4))
+    z = jax.random.normal(jax.random.PRNGKey(4), (5, 4))
+    g = jax.grad(lambda xx: jnp.sum(ste_quantize(xx, z, metric) ** 2))(x)
+    # STE: dL/dx == dL/dx_hat = 2*x_hat
+    xh = ste_quantize(x, z, metric)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * xh), rtol=1e-5)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_ste_centroid_gradient_is_scatter(metric, rng):
+    x = jax.random.normal(rng, (16, 4))
+    z = jax.random.normal(jax.random.PRNGKey(5), (6, 4))
+    gz = jax.grad(lambda zz: jnp.sum(ste_quantize(x, zz, metric)))(z)
+    # each centroid's grad = count of assigned points (for sum loss)
+    idx = np.asarray(assign(x, z, metric))
+    counts = np.bincount(idx, minlength=6).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(gz),
+                               np.tile(counts[:, None], (1, 4)), rtol=1e-5)
+
+
+def test_subspace_versions_match_per_subspace(rng):
+    m, nc, v, c = 9, 5, 4, 8
+    x = jax.random.normal(rng, (m, nc, v))
+    z = jax.random.normal(jax.random.PRNGKey(6), (nc, c, v))
+    d = pairwise_distance_subspaces(x, z, "l2")
+    idx = assign_subspaces(x, z, "l2")
+    for k in range(nc):
+        dk = pairwise_distance(x[:, k], z[k], "l2")
+        np.testing.assert_allclose(np.asarray(d[:, k]), np.asarray(dk),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(idx[:, k]),
+                                      np.asarray(jnp.argmin(dk, -1)))
+    xh = ste_quantize_subspaces(x, z, "l2")
+    assert xh.shape == x.shape
+
+
+def test_soft_assignment_limits(rng):
+    x = jax.random.normal(rng, (6, 3, 4))
+    z = jax.random.normal(jax.random.PRNGKey(7), (3, 5, 4))
+    probs = soft_assignment(x, z, "l2", temperature=1e-4)
+    hard = assign_subspaces(x, z, "l2")
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(probs, -1)),
+                                  np.asarray(hard))
+    s = soft_assignment(x, z, "l2", temperature=1.0)
+    np.testing.assert_allclose(np.asarray(jnp.sum(s, -1)), 1.0, rtol=1e-5)
