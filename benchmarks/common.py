@@ -28,3 +28,25 @@ def time_jax(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         times.append((time.perf_counter() - t0) * 1e6)
     times.sort()
     return times[len(times) // 2]
+
+
+def time_jax_pair(fn_a: Callable, fn_b: Callable, *args,
+                  warmup: int = 2, iters: int = 10) -> tuple:
+    """Best-of-N wall-time (µs) for two callables, measured interleaved.
+
+    Interleaving + min makes A/B comparisons robust to host scheduler
+    noise: a slow slice of the machine penalises both variants equally,
+    and the minimum approximates the noise-free cost of each.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a(*args))
+        jax.block_until_ready(fn_b(*args))
+    best_a = best_b = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        best_a = min(best_a, (time.perf_counter() - t0) * 1e6)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        best_b = min(best_b, (time.perf_counter() - t0) * 1e6)
+    return best_a, best_b

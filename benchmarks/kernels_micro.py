@@ -8,7 +8,36 @@ from repro.core.lut import build_lut
 from repro.kernels import ref
 from repro.kernels.ops import lut_matmul, vq_assign
 
-from .common import emit, time_jax
+from .common import emit, time_jax, time_jax_pair
+
+
+def _bench_fused_vs_two_pass(x, z, lut, tag: str) -> None:
+    """micro/fused_amm_* rows: one jitted fused program (assignment feeds the
+    LUT contraction with no materialised index tensor) against the two-pass
+    pipeline that writes the (M, nc) int32 indices out between kernels.
+
+    The two variants are timed interleaved (best-of-N) so host scheduler
+    noise hits both equally — the ratio is the signal, not the wall time.
+    """
+    m, nc, _ = x.shape
+
+    assign_j = jax.jit(lambda a, b: ref.assign_ref(a, b, "l2"))
+    lookup_j = jax.jit(ref.lut_gemm_onehot)
+
+    def two_pass(a, b, l):
+        idx = assign_j(a, b)            # (M, nc) int32 round-trip
+        return lookup_j(idx, l)
+
+    fused_j = jax.jit(lambda a, b, l: ref.vq_amm_ref(a, b, l, metric="l2"))
+
+    t_two, t_fused = time_jax_pair(two_pass, fused_j, x, z, lut,
+                                   warmup=3, iters=30)
+    idx_bytes = m * nc * 4
+    emit(f"micro/two_pass_amm_{tag}", t_two,
+         f"idx intermediate {idx_bytes/1e3:.1f}KB")
+    emit(f"micro/fused_amm_{tag}", t_fused,
+         f"idx bytes eliminated {idx_bytes/1e3:.1f}KB; "
+         f"{t_two/t_fused:.2f}x vs two-pass")
 
 
 def run() -> None:
@@ -43,3 +72,9 @@ def run() -> None:
     t8 = time_jax(lookup8_j, idx, lut8, scale)
     emit("micro/lut_gemm_int8", t8,
          f"bytes {lut8.nbytes/1e6:.1f}MB vs bf16 weights {w.nbytes*0.5/1e6:.1f}MB")
+
+    # fused assign+lookup vs the two-pass pipeline, prefill + decode shapes
+    _bench_fused_vs_two_pass(x, z, lut, f"{m}x{k}x{n}")
+    md = 8                                            # decode-shaped batch
+    xd = jax.random.normal(jax.random.fold_in(key, 3), (md, nc, v))
+    _bench_fused_vs_two_pass(xd, z, lut, f"{md}x{k}x{n}")

@@ -19,5 +19,7 @@ def smoke_config() -> ModelConfig:
         name="deepseek-smoke", family="moe",
         num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
         d_ff=32, vocab_size=256,
-        num_experts=8, num_shared_experts=2, top_k=2, capacity_factor=2.0,
+        # cf=4 makes routing drop-free at smoke sizes (cap==T): the
+        # decode-vs-forward parity tests require no capacity overflow.
+        num_experts=8, num_shared_experts=2, top_k=2, capacity_factor=4.0,
         dtype="float32", tie_embeddings=False)

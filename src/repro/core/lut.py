@@ -43,7 +43,9 @@ class QuantConfig:
     lut_dtype: str = "float32"     # float32 | bfloat16 | int8
     recon_weight: float = 0.05     # paper's penalty ratio
     task_grad_to_centroids: bool = False   # LUT-NN-style alternative path
-    impl: str = "auto"             # kernel impl: auto | pallas | ref
+    impl: str = "auto"             # kernel impl: auto | fused | pallas | ref
+    fuse: bool = True              # lut_infer: one fused assign+LUT kernel
+    #                                (indices stay in VMEM) vs two-pass
 
     @property
     def spec(self) -> CodebookSpec:
@@ -170,11 +172,16 @@ def lut_linear_apply(p: Params, x: jax.Array, qc: QuantConfig,
 
     if qc.mode == "lut_infer":
         x2d = xs.reshape(-1, k // qc.v, qc.v)
-        idx = kops.vq_assign(x2d, p["z"], qc.metric, impl=qc.impl)
         lut = p.get("lut")
         if lut is None:                    # on-the-fly (testing convenience)
             lut = build_lut(p["w"], p["z"])
-        out = kops.lut_matmul(idx, lut, p.get("lut_scale"), impl=qc.impl)
+        if qc.fuse:
+            # CCM pipelined into IMM: no (M, nc) index tensor in HBM.
+            out = kops.vq_amm(x2d, p["z"], lut, p.get("lut_scale"),
+                              qc.metric, impl=qc.impl)
+        else:
+            idx = kops.vq_assign(x2d, p["z"], qc.metric, impl=qc.impl)
+            out = kops.lut_matmul(idx, lut, p.get("lut_scale"), impl=qc.impl)
         out = out.reshape(*lead, -1).astype(x.dtype)
         if "b" in p:
             out = out + p["b"]

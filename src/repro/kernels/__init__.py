@@ -1,5 +1,7 @@
-"""Pallas TPU kernels for the LUT-DLA hot spots (assign + lut_gemm)."""
-from . import ops, ref
+"""Pallas TPU kernels for the LUT-DLA hot spots (assign + lut_gemm + the
+fused assign→lut_gemm pipeline that keeps indices out of HBM)."""
+from . import ops, ref, tuning
 from .assign import vq_assign_pallas
+from .fused_amm import vq_amm_pallas
 from .lut_gemm import lut_gemm_pallas
-from .ops import lut_matmul, vq_assign
+from .ops import lut_matmul, vq_amm, vq_assign

@@ -21,12 +21,14 @@ keeps it resident in VMEM while streaming M tiles — the CCM's
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.similarity import Metric
+from .tuning import select_blocks
 
 
 def _assign_kernel(x_ref, z_ref, o_ref, *, metric: str):
@@ -50,14 +52,19 @@ def _assign_kernel(x_ref, z_ref, o_ref, *, metric: str):
 @functools.partial(jax.jit, static_argnames=("metric", "block_m", "block_k",
                                              "interpret"))
 def vq_assign_pallas(x: jax.Array, z: jax.Array, metric: Metric = "l2",
-                     block_m: int = 256, block_k: int = 8,
+                     block_m: Optional[int] = None,
+                     block_k: Optional[int] = None,
                      interpret: bool = False) -> jax.Array:
-    """x (M, nc, v), z (nc, c, v) -> idx (M, nc) int32."""
+    """x (M, nc, v), z (nc, c, v) -> idx (M, nc) int32.
+
+    Block sizes default to the shared decode/prefill heuristic table.
+    """
     m, nc, v = x.shape
     nc_z, c, v_z = z.shape
     assert (nc, v) == (nc_z, v_z), (x.shape, z.shape)
-    bm = min(block_m, m)
-    bk = min(block_k, nc)
+    auto = select_blocks("assign", m, nc, c)
+    bm = min(block_m or auto.block_m, m)
+    bk = min(block_k or auto.block_k, nc)
     if m % bm or nc % bk:
         # pad M and nc up to multiples (indices in padding are discarded)
         pad_m = (-m) % bm

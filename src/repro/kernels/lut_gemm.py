@@ -22,11 +22,14 @@ fp32 scale applied once after the k-accumulation; accumulation is fp32.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .tuning import select_blocks
 
 
 def _lut_gemm_kernel(idx_ref, lut_ref, o_ref, acc_ref, *, n_k: int, c: int):
@@ -57,19 +60,23 @@ def _lut_gemm_kernel(idx_ref, lut_ref, o_ref, acc_ref, *, n_k: int, c: int):
                                              "interpret", "out_dtype"))
 def lut_gemm_pallas(idx: jax.Array, lut: jax.Array,
                     scale: jax.Array | None = None,
-                    block_m: int = 256, block_n: int = 512, block_k: int = 16,
+                    block_m: Optional[int] = None,
+                    block_n: Optional[int] = None,
+                    block_k: Optional[int] = None,
                     interpret: bool = False,
                     out_dtype=jnp.float32) -> jax.Array:
     """idx (M, nc) int32, lut (nc, c, N) -> out (M, N).
 
     scale: optional (N,) fp32 dequantisation scale for int8 LUTs.
+    Block sizes default to the shared decode/prefill heuristic table.
     """
     m, nc = idx.shape
     nc_l, c, n = lut.shape
     assert nc == nc_l, (idx.shape, lut.shape)
-    bm = min(block_m, m)
-    bn = min(block_n, n)
-    bk = min(block_k, nc)
+    auto = select_blocks("lut_gemm", m, nc, c, n, lut.dtype.itemsize)
+    bm = min(block_m or auto.block_m, m)
+    bn = min(block_n or auto.block_n, n)
+    bk = min(block_k or auto.block_k, nc)
     if m % bm or n % bn or nc % bk:
         pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-nc) % bk
         idx_p = jnp.pad(idx, ((0, pad_m), (0, pad_k)))

@@ -1,11 +1,22 @@
 """Public kernel entry points with impl dispatch.
 
 ``impl``:
+  * "fused"   — single Pallas kernel doing assign + LUT accumulation with
+                indices confined to VMEM (no (M, nc) HBM round-trip).
+                Only meaningful for :func:`vq_amm`; the single-stage entry
+                points treat it as "auto".
   * "pallas"  — the Pallas kernels (interpret=True automatically on CPU).
+                For :func:`vq_amm` this is the two-pass assign→lut_gemm
+                composition (the fused kernel's baseline).
   * "ref"     — XLA-native one-hot/einsum formulation. Used for full-model
                 lowering in the multi-pod dry-run: the HLO cost is identical
                 to the kernel's MXU work, and XLA can shard/fuse it.
-  * "auto"    — pallas on TPU, ref otherwise (default).
+  * "auto"    — fused on TPU for vq_amm, pallas on TPU otherwise,
+                ref off-TPU (default).
+
+Block sizes default to the shared decode/prefill heuristic in
+:mod:`repro.kernels.tuning`; pass ``block_m``/``block_n``/``block_k``
+through ``**kw`` to override.
 """
 from __future__ import annotations
 
@@ -17,9 +28,10 @@ import jax.numpy as jnp
 from repro.core.similarity import Metric
 from . import ref as _ref
 from .assign import vq_assign_pallas
+from .fused_amm import vq_amm_pallas
 from .lut_gemm import lut_gemm_pallas
 
-Impl = Literal["auto", "pallas", "ref"]
+Impl = Literal["auto", "fused", "pallas", "ref"]
 
 
 def _on_tpu() -> bool:
@@ -29,7 +41,7 @@ def _on_tpu() -> bool:
 def vq_assign(x: jax.Array, z: jax.Array, metric: Metric = "l2",
               impl: Impl = "auto", **kw) -> jax.Array:
     """x (M, nc, v), z (nc, c, v) -> idx (M, nc) int32."""
-    if impl == "auto":
+    if impl in ("auto", "fused"):        # no single-stage fusion to do
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "ref":
         return _ref.assign_ref(x, z, metric)
@@ -39,9 +51,33 @@ def vq_assign(x: jax.Array, z: jax.Array, metric: Metric = "l2",
 def lut_matmul(idx: jax.Array, lut: jax.Array, scale=None,
                impl: Impl = "auto", out_dtype=jnp.float32, **kw) -> jax.Array:
     """idx (M, nc) int32, lut (nc, c, N) [+ scale (N,)] -> (M, N)."""
-    if impl == "auto":
+    if impl in ("auto", "fused"):
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "ref":
         return _ref.lut_gemm_onehot(idx, lut, scale, out_dtype=out_dtype)
     return lut_gemm_pallas(idx, lut, scale, interpret=not _on_tpu(),
                            out_dtype=out_dtype, **kw)
+
+
+def vq_amm(x: jax.Array, z: jax.Array, lut: jax.Array, scale=None,
+           metric: Metric = "l2", impl: Impl = "auto",
+           out_dtype=jnp.float32, **kw) -> jax.Array:
+    """Fused approximate matmul: assignment + LUT accumulation in one shot.
+
+    x (M, nc, v), z (nc, c, v), lut (nc, c, N) [+ scale (N,)] -> (M, N).
+
+    "auto" prefers the fused Pallas kernel on TPU (indices never reach
+    HBM) and the XLA-native oracle elsewhere. "pallas" runs the unfused
+    two-pass pipeline — kept as the fused kernel's measurable baseline.
+    """
+    if impl == "auto":
+        impl = "fused" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.vq_amm_ref(x, z, lut, scale, metric, out_dtype=out_dtype)
+    if impl == "pallas":                 # two-pass baseline
+        akw = {k: v for k, v in kw.items() if k in ("block_m", "block_k")}
+        idx = vq_assign_pallas(x, z, metric, interpret=not _on_tpu(), **akw)
+        return lut_gemm_pallas(idx, lut, scale, interpret=not _on_tpu(),
+                               out_dtype=out_dtype, **kw)
+    return vq_amm_pallas(x, z, lut, scale, metric,
+                         interpret=not _on_tpu(), out_dtype=out_dtype, **kw)

@@ -49,6 +49,25 @@ def lut_gemm_ref(idx: jax.Array, lut: jax.Array,
     return out
 
 
+def vq_amm_ref(x: jax.Array, z: jax.Array, lut: jax.Array,
+               scale: jax.Array | None = None,
+               metric: Metric = "l2",
+               out_dtype=jnp.float32) -> jax.Array:
+    """Oracle for the fused assign+lookup kernel (two-pass composition).
+
+    x   : (M, nc, v)    input sub-vectors
+    z   : (nc, c, v)    centroids
+    lut : (nc, c, N)    precomputed table (float or int8)
+    -> (M, N)
+
+    Exactly ``lut_gemm_onehot(assign_ref(x, z), lut)`` — the fused Pallas
+    kernel must match this bit-for-bit on indices and to fp32-accumulation
+    tolerance on values.
+    """
+    idx = assign_ref(x, z, metric)
+    return lut_gemm_onehot(idx, lut, scale, out_dtype=out_dtype)
+
+
 def lut_gemm_onehot(idx: jax.Array, lut: jax.Array,
                     scale: jax.Array | None = None,
                     out_dtype=jnp.float32) -> jax.Array:

@@ -1,0 +1,96 @@
+"""Block-size selection shared by every LUT-DLA Pallas kernel.
+
+A tiny autotune table instead of per-call magic numbers. Two workload
+regimes dominate serving:
+
+  * decode   (M <= 8)   — one token per active sequence. The LUT stream
+                          dominates; M-tiles are as small as the batch and
+                          the N-tile is kept wide so each (bk, c, bn) LUT
+                          block is fetched from HBM exactly once
+                          (LS property: "never load the same LUT twice").
+  * prefill  (M >= 256) — batched prompt processing. MXU-shaped M-tiles
+                          amortise the LUT fetch across many rows.
+
+Anything in between ("mid") gets a compromise tile. Entries are
+(block_m, block_n, block_k); the wrappers clamp each to the actual dim, and
+``fit_vmem`` shrinks block_n until the resident LUT tile fits the VMEM
+budget for large-``c`` codebooks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# per-kernel VMEM budget for the M-stationary LUT/centroid block (bytes).
+# Conservative: real VMEM is ~16 MB/core but the pipeline double-buffers
+# input blocks and holds the fp32 accumulator too.
+_VMEM_BUDGET = 4 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    block_m: int
+    block_n: int
+    block_k: int          # subspace (nc) tile
+
+
+#: regime -> kernel kind -> (bm, bn, bk).  ``bn`` is unused by "assign".
+_TABLE = {
+    "decode": {
+        "assign":   BlockConfig(8, 0, 16),
+        "lut_gemm": BlockConfig(8, 512, 16),
+        "fused":    BlockConfig(8, 512, 16),
+    },
+    "mid": {
+        "assign":   BlockConfig(128, 0, 8),
+        "lut_gemm": BlockConfig(128, 256, 16),
+        "fused":    BlockConfig(128, 256, 8),
+    },
+    "prefill": {
+        "assign":   BlockConfig(256, 0, 8),
+        "lut_gemm": BlockConfig(256, 512, 16),
+        "fused":    BlockConfig(256, 512, 8),
+    },
+}
+
+
+def regime(m: int) -> str:
+    """Workload regime from the row count (decode | mid | prefill)."""
+    if m <= 8:
+        return "decode"
+    if m >= 256:
+        return "prefill"
+    return "mid"
+
+
+def fit_vmem(block_n: int, block_k: int, c: int,
+             bytes_per_entry: int = 4) -> tuple[int, int]:
+    """Shrink (block_n, then block_k) until the (bk, c, bn) LUT tile fits
+    the VMEM budget. Returns (block_n, block_k)."""
+    bn, bk = block_n, block_k
+    while bn > 128 and bk * c * bn * bytes_per_entry > _VMEM_BUDGET:
+        bn //= 2
+    while bk > 1 and bk * c * bn * bytes_per_entry > _VMEM_BUDGET:
+        bk //= 2
+    return bn, bk
+
+
+def select_blocks(kind: str, m: int, nc: int, c: int,
+                  n: Optional[int] = None,
+                  itemsize: int = 4) -> BlockConfig:
+    """Pick (block_m, block_n, block_k) for kernel ``kind`` on this shape.
+
+    kind: "assign" | "lut_gemm" | "fused".  All values are upper bounds —
+    callers clamp to the actual dims (and pad non-multiples).
+    itemsize: bytes per LUT entry (1 for int8 LUTs — they fit 4x bigger
+    tiles in the same VMEM budget).
+    """
+    cfg = _TABLE[regime(m)][kind]
+    bm = min(cfg.block_m, max(m, 1))
+    bk = min(cfg.block_k, max(nc, 1))
+    if kind == "assign":
+        return BlockConfig(bm, 0, bk)
+    bn, bk = fit_vmem(cfg.block_n, bk, c, itemsize)
+    if n is not None:
+        bn = min(bn, max(n, 1))
+    return BlockConfig(bm, bn, bk)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.lut import QuantConfig
 from repro.core.similarity import ste_quantize_subspaces
-from repro.kernels import ref as kref
+from repro.kernels import ops as kops
 from .layers import rms_norm
 
 Params = Dict
@@ -57,15 +57,27 @@ def expert_proj(p: Params, x: jax.Array, qc: QuantConfig
         recon = (jnp.mean((sg(out_q) - out_d) ** 2)
                  + jnp.mean((out_q - sg(out_d)) ** 2)).astype(jnp.float32)
         return out_d + sg(out_q - out_d), recon
-    # lut_infer
+    # lut_infer — per-expert codebooks through the shared kernel dispatch,
+    # so experts ride the same Pallas/fused paths as every other projection.
     lut = p.get("lut")
     if lut is None:
         lut = jax.vmap(lambda w, z: jnp.einsum(
             "kcv,kvn->kcn", z.astype(jnp.float32),
             w.reshape(z.shape[0], qc.v, -1).astype(jnp.float32)))(
                 p["w"], p["z"])
-    idx = jax.vmap(lambda xx, zz: kref.assign_ref(xx, zz, qc.metric))(xs, p["z"])
-    out = jax.vmap(lambda ii, ll: kref.lut_gemm_onehot(ii, ll))(idx, lut)
+    scale = p.get("lut_scale")           # (E, N) when the LUT is int8
+    s_ax = None if scale is None else 0  # None is an empty pytree under vmap
+    if qc.fuse:
+        out = jax.vmap(
+            lambda xx, zz, ll, ss: kops.vq_amm(
+                xx, zz, ll, ss, qc.metric, impl=qc.impl),
+            in_axes=(0, 0, 0, s_ax))(xs, p["z"], lut, scale)
+    else:
+        idx = jax.vmap(lambda xx, zz: kops.vq_assign(
+            xx, zz, qc.metric, impl=qc.impl))(xs, p["z"])
+        out = jax.vmap(
+            lambda ii, ll, ss: kops.lut_matmul(ii, ll, ss, impl=qc.impl),
+            in_axes=(0, 0, s_ax))(idx, lut, scale)
     return out.astype(x.dtype), zero
 
 

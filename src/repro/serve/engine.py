@@ -48,12 +48,18 @@ class Engine:
             lambda p, t, c: model.decode(p, t, c, qc),
             donate_argnums=(2,))
 
-    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    def _sample(self, logits: jax.Array,
+                temps: Optional[jax.Array]) -> jax.Array:
+        """Per-slot sampling: greedy where temperature <= 0, categorical
+        (logits / T) elsewhere. temps: (B,) fp32 device array, or None
+        when the whole batch is greedy."""
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if temps is None:
+            return greedy
         self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(
-            sub, logits / temperature, axis=-1).astype(jnp.int32)
+        scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+        sampled = jax.random.categorical(sub, scaled, axis=-1).astype(jnp.int32)
+        return jnp.where(temps > 0.0, sampled, greedy)
 
     def run(self, requests: List[Request]) -> List[Request]:
         """Serve all requests (in batches of `batch_size`)."""
@@ -76,8 +82,12 @@ class Engine:
         active = np.ones(pad_b, bool)
         active[b:] = False
         max_new = max(r.max_new_tokens for r in reqs)
-        temp = reqs[0].temperature
-        next_tok = self._sample(logits, temp)
+        # per-request temperature (padding slots decode greedily — discarded);
+        # moved to device once, not per decode step
+        temps_h = np.zeros(pad_b, np.float32)
+        temps_h[:b] = [r.temperature for r in reqs]
+        temps = jnp.asarray(temps_h) if (temps_h > 0.0).any() else None
+        next_tok = self._sample(logits, temps)
         for step in range(max_new):
             np_tok = np.asarray(next_tok)
             for j, r in enumerate(reqs):
@@ -92,7 +102,7 @@ class Engine:
                 break
             logits, cache = self._decode(
                 self.params, jnp.asarray(np_tok)[:, None], cache)
-            next_tok = self._sample(logits, temp)
+            next_tok = self._sample(logits, temps)
         for r in reqs:
             r.done = True
 

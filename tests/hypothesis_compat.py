@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is a test-only dependency (declared in pyproject's ``test``
+extra) that may be absent in minimal environments. A bare
+``pytest.importorskip("hypothesis")`` at module level would skip every test
+in the importing module — including the non-property ones — so instead this
+shim exposes real ``given``/``settings``/``st`` when hypothesis is
+installed, and skip-decorators that disable only the property-based tests
+when it is not.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAS_HYPOTHESIS = False
+
+    def given(*_a, **_kw):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+        return deco
+
+    def settings(*_a, **_kw):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Accepts any strategy construction at decoration time."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **kw: None
+
+    st = _StrategyStub()

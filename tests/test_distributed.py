@@ -15,9 +15,9 @@ from repro.core.lut import QuantConfig
 from repro.parallel.sharding import param_pspecs, batch_pspecs
 from repro.train.trainer import TrainConfig, make_train_step, init_opt_state
 from repro.data import SyntheticDataset
+from repro.launch.mesh import make_test_mesh
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_test_mesh((2, 2), ("data", "model"))
 shard = lambda t: jax.tree_util.tree_map(
     lambda s: NamedSharding(mesh, s), t, is_leaf=lambda s: isinstance(s, P))
 qc = QuantConfig(mode="lut_train", v=4, c=8, impl="ref")
@@ -51,9 +51,9 @@ from repro.models.model import Model
 from repro.core.lut import QuantConfig
 from repro.core import precompute_model
 from repro.parallel.sharding import param_pspecs, cache_pspecs
+from repro.launch.mesh import make_test_mesh
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_test_mesh((2, 2), ("data", "model"))
 shard = lambda t: jax.tree_util.tree_map(
     lambda s: NamedSharding(mesh, s), t, is_leaf=lambda s: isinstance(s, P))
 qc = QuantConfig(mode="lut_infer", v=4, c=8, impl="ref", lut_dtype="int8")
@@ -83,7 +83,8 @@ def test_pipeline_parallelism_matches_sequential():
     out = run_in_devices("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.parallel.pipeline import run_pipeline
-mesh = jax.make_mesh((4,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((4,), ("stage",))
 key = jax.random.PRNGKey(0)
 ws = jax.random.normal(key, (4, 32, 32)) / 32**0.5
 block = lambda w, x: jax.nn.gelu(x @ w)
@@ -103,7 +104,8 @@ def test_hlo_cost_counts_loop_collectives():
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.hlo_cost import module_cost
-mesh = jax.make_mesh((4,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((4,), ("model",))
 def g(x, ws):
     def body(c, w): return jnp.tanh(c @ w), None
     return jax.lax.scan(body, x, ws)[0]

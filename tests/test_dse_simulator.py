@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.dse.models import (DataflowOrder, LutDlaPoint, compute_model,
                               dataflow_memory, imm_resources, memory_model,

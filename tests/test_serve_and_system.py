@@ -50,6 +50,26 @@ def test_engine_batching_isolates_requests():
     assert r_alone.out_tokens == r_batched.out_tokens
 
 
+def test_engine_per_request_temperature():
+    """A greedy (T=0) request must stay deterministic even when batched
+    behind a stochastic one (the engine used to apply reqs[0].temperature
+    to the whole batch)."""
+    cfg = get_smoke_config("yi-9b").replace(attn_impl="naive")
+    m = Model(cfg)
+    params = m.init(KEY, DENSE)
+    r_alone = Request(tokens=[7, 8, 9], max_new_tokens=6)
+    Engine(m, params, DENSE, batch_size=1, max_seq=64).run([r_alone])
+    hot = Request(tokens=[1, 2, 3], max_new_tokens=6, temperature=2.0)
+    r_batched = Request(tokens=[7, 8, 9], max_new_tokens=6)
+    Engine(m, params, DENSE, batch_size=2, max_seq=64).run([hot, r_batched])
+    assert r_batched.out_tokens == r_alone.out_tokens
+    # and the hot request actually sampled: same engine seed, T=0 vs T=2
+    hot_greedy = Request(tokens=[1, 2, 3], max_new_tokens=6)
+    Engine(m, params, DENSE, batch_size=1, max_seq=64).run([hot_greedy])
+    assert len(hot.out_tokens) == 6
+    assert hot.out_tokens != hot_greedy.out_tokens
+
+
 def test_end_to_end_lutboost_pipeline():
     """The paper's full workflow: dense train → stage① convert → stage②/③
     fine-tune → precompute LUTs → serve. Accuracy of the LUT model must
