@@ -1,0 +1,102 @@
+"""Docs CI: markdown link check + doctest of fenced ``>>>`` examples.
+
+Usage:  PYTHONPATH=src python scripts/check_docs.py [files...]
+
+With no arguments, checks README.md and every ``docs/*.md``.
+
+Two passes per file:
+  1. **Links** — every inline markdown link/image target is validated:
+     relative paths must exist on disk (anchors are stripped; pure
+     ``#anchor`` links must match a heading in the same file); http(s)
+     URLs are only sanity-checked for shape (no network in CI).
+  2. **Doctests** — every fenced ```python block containing ``>>>`` is
+     run through :mod:`doctest`, so the examples in the docs cannot rot.
+"""
+from __future__ import annotations
+
+import doctest
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def check_links(path: str, text: str) -> list:
+    errors = []
+    anchors = {_slug(h) for h in HEADING_RE.findall(text)}
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://")):
+            if "." not in target:
+                errors.append(f"{path}: suspicious URL {target!r}")
+            continue
+        if target.startswith("#"):
+            if target[1:] not in anchors:
+                errors.append(f"{path}: broken anchor {target!r}")
+            continue
+        if target.startswith("mailto:"):
+            continue
+        rel, _, anchor = target.partition("#")
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(os.path.abspath(path)), rel))
+        if not os.path.exists(resolved):
+            errors.append(f"{path}: broken link {target!r} "
+                          f"(no such file {resolved})")
+    return errors
+
+
+def check_doctests(path: str, text: str) -> list:
+    errors = []
+    parser = doctest.DocTestParser()
+    runner = doctest.DocTestRunner(verbose=False,
+                                   optionflags=doctest.ELLIPSIS)
+    for i, block in enumerate(FENCE_RE.findall(text)):
+        if ">>>" not in block:
+            continue
+        test = parser.get_doctest(block, {}, f"{path}[fence {i}]", path, 0)
+        out = []
+        runner.run(test, out=out.append)
+        if runner.failures:
+            errors.append(f"{path} fence {i}: doctest failed\n"
+                          + "".join(out))
+            runner = doctest.DocTestRunner(verbose=False,
+                                           optionflags=doctest.ELLIPSIS)
+    return errors
+
+
+def main(argv) -> int:
+    files = argv or (sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+                     + [os.path.join(ROOT, "README.md")])
+    errors = []
+    n_tests = 0
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        errors += check_links(path, text)
+        blocks = [b for b in FENCE_RE.findall(text) if ">>>" in b]
+        n_tests += len(blocks)
+        errors += check_doctests(path, text)
+        print(f"[check_docs] {os.path.relpath(path, ROOT)}: "
+              f"{len(LINK_RE.findall(text))} links, "
+              f"{len(blocks)} doctest fences")
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        return 1
+    print(f"[check_docs] OK ({len(files)} files, {n_tests} doctest fences)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

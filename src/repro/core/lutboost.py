@@ -70,7 +70,20 @@ def _walk_lut_layers(tree, fn):
 def kmeans_init_from_capture(params, captured: Dict[int, np.ndarray],
                              qc: QuantConfig, iters: int = 10,
                              seed: int = 0) -> Any:
-    """Replace every captured layer's centroids with k-means of its inputs."""
+    """Replace every captured layer's centroids with k-means of its inputs.
+
+    Args:
+      params: model params pytree containing LutLinear sub-dicts (w & z).
+      captured: ``id(layer["z"]) -> (rows, K)`` activation matrix from
+        :func:`capture_activations`.
+      qc: quant config; ``qc.spec`` fixes (v, c, metric) for k-means.
+      iters: Lloyd iterations per layer; seed: base PRNG seed (offset by
+        a per-layer counter so layers get distinct inits).
+
+    Returns: params with each captured layer's ``z`` replaced by its
+    per-subspace k-means codebook (dtype preserved); uncaptured layers
+    are returned untouched.
+    """
     counter = [0]
 
     def init(layer):
@@ -93,7 +106,17 @@ def convert(apply_fn: Callable, params, calib_batch, qc: QuantConfig,
             iters: int = 10, seed: int = 0):
     """LUTBoost stage ①: run one calibration forward, k-means-init centroids.
 
-    ``apply_fn(params, batch)`` must execute every LutLinear eagerly.
+    Args:
+      apply_fn: ``apply_fn(params, batch)`` running the model; it must
+        execute every LutLinear *eagerly* (outside jit) so the capture
+        hook sees concrete arrays.
+      params: params whose LutLinear layers already carry ``z`` leaves
+        (init the model with a ``lut_train`` QuantConfig).
+      calib_batch: one representative batch — its activations define the
+        centroid init.
+      qc / iters / seed: forwarded to :func:`kmeans_init_from_capture`.
+
+    Returns: params with calibrated centroids (stage ② trains them).
     """
     with capture_activations() as captured:
         apply_fn(params, calib_batch)
@@ -130,7 +153,8 @@ class LutBoostSchedule:
 
 
 def centroid_only_mask(params) -> Any:
-    """Pytree of bools: True only on centroid leaves (stage ② freezing)."""
+    """Pytree of bools matching ``params``: True only on centroid (``z``)
+    leaves — the stage-② trainable set (weights frozen)."""
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
 
     def is_centroid(path) -> bool:
@@ -143,12 +167,15 @@ def centroid_only_mask(params) -> Any:
 
 
 def stage_mask(params, stage: int):
+    """Trainable mask for a LUTBoost stage: centroids-only for stage ②,
+    everything for stage ③."""
     if stage == 2:
         return centroid_only_mask(params)
     return jax.tree_util.tree_map(lambda _: True, params)
 
 
 def apply_mask(grads, mask):
+    """Zero out gradient leaves wherever ``mask`` is False (frozen)."""
     return jax.tree_util.tree_map(
         lambda g, m: g if m else jnp.zeros_like(g), grads, mask)
 
@@ -158,5 +185,10 @@ def apply_mask(grads, mask):
 # ---------------------------------------------------------------------------
 
 def precompute_model(params, qc: QuantConfig):
-    """Build inference LUTs for every LutLinear in the tree (paper step-2)."""
+    """Build inference LUTs for every LutLinear in the tree (paper step-2).
+
+    Adds ``lut (nc, c, N)`` — int8 plus ``lut_scale (N,)`` when
+    ``qc.lut_dtype == "int8"`` — to each LutLinear so it can serve in
+    ``mode="lut_infer"`` (no dense GEMMs at runtime; the serving engines
+    consume these params directly)."""
     return _walk_lut_layers(params, lambda p: precompute_layer(p, qc))

@@ -40,7 +40,19 @@ def _on_tpu() -> bool:
 
 def vq_assign(x: jax.Array, z: jax.Array, metric: Metric = "l2",
               impl: Impl = "auto", **kw) -> jax.Array:
-    """x (M, nc, v), z (nc, c, v) -> idx (M, nc) int32."""
+    """CCM stage: nearest-centroid assignment per subspace.
+
+    Args:
+      x: (M, nc, v) inputs split into ``nc`` sub-vectors of length ``v``.
+      z: (nc, c, v) codebook centroids (``c`` per subspace).
+      metric: "l2" | "l1" | "chebyshev" distance.
+      impl: dispatch (see module docstring); "fused" degrades to "auto"
+        here — there is no single-stage fusion to do.
+      **kw: block-size overrides (``block_m`` / ``block_k``) forwarded to
+        the Pallas kernel; defaults come from :mod:`repro.kernels.tuning`.
+
+    Returns: (M, nc) int32 centroid indices.
+    """
     if impl in ("auto", "fused"):        # no single-stage fusion to do
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "ref":
@@ -50,7 +62,18 @@ def vq_assign(x: jax.Array, z: jax.Array, metric: Metric = "l2",
 
 def lut_matmul(idx: jax.Array, lut: jax.Array, scale=None,
                impl: Impl = "auto", out_dtype=jnp.float32, **kw) -> jax.Array:
-    """idx (M, nc) int32, lut (nc, c, N) [+ scale (N,)] -> (M, N)."""
+    """IMM stage: accumulate precomputed partial products out of the LUT.
+
+    Args:
+      idx: (M, nc) int32 centroid indices from :func:`vq_assign`.
+      lut: (nc, c, N) table — ``lut[k, j] = z[k, j] · W[k·v:(k+1)·v]``.
+      scale: optional (N,) per-output-column dequant scale (int8 LUTs).
+      impl: dispatch; "fused" degrades to "auto" (single stage).
+      out_dtype: accumulator/output dtype (fp32 default).
+      **kw: block-size overrides (``block_m``/``block_n``/``block_k``).
+
+    Returns: (M, N) output, ``sum_k lut[k, idx[m, k], :]`` (× scale).
+    """
     if impl in ("auto", "fused"):
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "ref":
@@ -62,13 +85,20 @@ def lut_matmul(idx: jax.Array, lut: jax.Array, scale=None,
 def vq_amm(x: jax.Array, z: jax.Array, lut: jax.Array, scale=None,
            metric: Metric = "l2", impl: Impl = "auto",
            out_dtype=jnp.float32, **kw) -> jax.Array:
-    """Fused approximate matmul: assignment + LUT accumulation in one shot.
+    """Fused approximate matmul: CCM assignment + IMM accumulation in one.
 
-    x (M, nc, v), z (nc, c, v), lut (nc, c, N) [+ scale (N,)] -> (M, N).
+    Args:
+      x: (M, nc, v) inputs; z: (nc, c, v) centroids;
+      lut: (nc, c, N) precomputed table; scale: optional (N,) dequant.
+      metric: "l2" | "l1" | "chebyshev".
+      impl: "auto" prefers the fused Pallas kernel on TPU (indices never
+        reach HBM) and the XLA-native oracle elsewhere; "pallas" runs the
+        unfused two-pass pipeline — kept as the fused kernel's measurable
+        baseline; "ref" forces the oracle.
+      out_dtype: accumulator/output dtype.
+      **kw: block-size overrides (``block_m``/``block_n``/``block_k``).
 
-    "auto" prefers the fused Pallas kernel on TPU (indices never reach
-    HBM) and the XLA-native oracle elsewhere. "pallas" runs the unfused
-    two-pass pipeline — kept as the fused kernel's measurable baseline.
+    Returns: (M, N) ≈ ``x.reshape(M, K) @ W`` for the W the LUT encodes.
     """
     if impl == "auto":
         impl = "fused" if _on_tpu() else "ref"

@@ -73,6 +73,27 @@ def mask_tile(qi: jax.Array, kj: jax.Array, window, prefix_len) -> jax.Array:
     return m
 
 
+def _trivial_start(kv_start) -> bool:
+    """True when ``kv_start`` is the static no-op value (int 0).
+
+    ``kv_start`` masks out key positions ``< kv_start`` — the left-pad
+    convention for batch-to-completion serving (prompts right-aligned, pad
+    ids occupying cache rows ``[0, pad_len)``). Keeping the zero case a
+    *Python* check preserves the exact HLO (and bit-identical outputs) of
+    every pre-existing call site.
+    """
+    return isinstance(kv_start, int) and kv_start == 0
+
+
+def _start_mask(kv_start, kj: jax.Array, b: int) -> jax.Array:
+    """(B, t) boolean mask keeping keys at positions >= kv_start.
+
+    kv_start: scalar or (B,) first *valid* key position per row.
+    """
+    ks = jnp.broadcast_to(jnp.asarray(kv_start, jnp.int32), (b,))
+    return kj[None, :] >= ks[:, None]
+
+
 # ---------------------------------------------------------------------------
 # attention
 # ---------------------------------------------------------------------------
@@ -91,8 +112,12 @@ def init_attention(key, cfg, qc: QuantConfig, dtype):
 
 
 def _sdpa(q, k, v, q_offset, window, prefix_len, impl="naive", chunk=1024,
-          ulysses=None):
-    """Grouped-query SDPA. q (B,S,H,D), k/v (B,T,KVH,D)."""
+          ulysses=None, kv_start=0):
+    """Grouped-query SDPA. q (B,S,H,D), k/v (B,T,KVH,D).
+
+    kv_start: scalar or (B,) — key positions < kv_start are masked out
+    (left-padded batched prompts; see :func:`_trivial_start`).
+    """
     b, s, h, d = q.shape
     t, kvh = k.shape[1], k.shape[2]
     g = h // kvh
@@ -100,21 +125,25 @@ def _sdpa(q, k, v, q_offset, window, prefix_len, impl="naive", chunk=1024,
     scale = d ** -0.5
     if impl == "chunked" and t > chunk:
         out = _sdpa_chunked(qg, k, v, scale, chunk, q_offset, window,
-                            prefix_len, ulysses)
+                            prefix_len, ulysses, kv_start=kv_start)
         return out.reshape(b, s, h, d)
     qi = jnp.arange(s) + q_offset
     kj = jnp.arange(t)
     mask = mask_tile(qi, kj, window, prefix_len)                 # (s, t)
     scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
                         preferred_element_type=jnp.float32) * scale
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if _trivial_start(kv_start):
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    else:                                        # (B, s, t) per-row mask
+        mb = mask[None] & _start_mask(kv_start, kj, b)[:, None, :]
+        scores = jnp.where(mb[:, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
     return out.reshape(b, s, h, d)
 
 
 def _sdpa_chunked(qg, k, v, scale, chunk, q_offset, window, prefix_len,
-                  ulysses=None):
+                  ulysses=None, kv_start=0):
     """Online-softmax attention scanning KV chunks (flash-style memory)."""
     b, s, kvh, g, d = qg.shape
     t = k.shape[1]
@@ -138,7 +167,11 @@ def _sdpa_chunked(qg, k, v, scale, chunk, q_offset, window, prefix_len,
         mk = mask_tile(qi, kj, window, prefix_len)               # (s, chunk)
         sc = jnp.einsum("bskgd,btkd->bkgst", qg, kb,
                         preferred_element_type=jnp.float32) * scale
-        sc = jnp.where(mk[None, None, None], sc, -1e30)
+        if _trivial_start(kv_start):
+            sc = jnp.where(mk[None, None, None], sc, -1e30)
+        else:
+            mb = mk[None] & _start_mask(kv_start, kj, b)[:, None, :]
+            sc = jnp.where(mb[:, None, None], sc, -1e30)
         m_new = jnp.maximum(m_run, jnp.max(sc, axis=-1))
         alpha = jnp.exp(m_run - m_new)
         p = jnp.exp(sc - m_new[..., None])
@@ -292,7 +325,8 @@ def _sdpa_local(q, k, v, window: int):
     return out.reshape(b, s, h, d).astype(q.dtype)
 
 
-def _sdpa_decode_combine(q, k_cache, v_cache, k_new, v_new, pos, window):
+def _sdpa_decode_combine(q, k_cache, v_cache, k_new, v_new, pos, window,
+                         kv_start=0):
     """Single-token decode over an *unmodified* cache + the new token.
 
     Two-part online softmax: the cache part (positions < pos) and the self
@@ -301,6 +335,9 @@ def _sdpa_decode_combine(q, k_cache, v_cache, k_new, v_new, pos, window):
     outside the layer loop. [§Perf I5]
 
     q (B,1,H,D); k_cache/v_cache (B,T,KVH,D); k_new/v_new (B,1,KVH,D).
+    pos: scalar, or (B,) per-row sequence lengths (continuous batching —
+    each slot decodes at its own position). kv_start: scalar or (B,) first
+    valid cache row (left-padded batch-to-completion prompts).
     """
     b, _, h, d = q.shape
     t, kvh = k_cache.shape[1], k_cache.shape[2]
@@ -308,12 +345,24 @@ def _sdpa_decode_combine(q, k_cache, v_cache, k_new, v_new, pos, window):
     qg = q.reshape(b, kvh, g, d)
     scale = d ** -0.5
     kj = jnp.arange(t)
-    mask = (kj < pos)
-    win = jnp.asarray(window)
-    mask = mask & jnp.where(win > 0, kj > pos - win, True)       # (T,)
+    pos_a = jnp.asarray(pos)
+    per_row = pos_a.ndim > 0 or not _trivial_start(kv_start)
     sc = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
                     preferred_element_type=jnp.float32) * scale
-    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    if per_row:
+        pos_b = jnp.broadcast_to(pos_a, (b,))
+        mask = kj[None, :] < pos_b[:, None]                      # (B, T)
+        win = jnp.asarray(window)
+        mask = mask & jnp.where(
+            win > 0, kj[None, :] > pos_b[:, None] - win, True)
+        if not _trivial_start(kv_start):
+            mask = mask & _start_mask(kv_start, kj, b)
+        sc = jnp.where(mask[:, None, None, :], sc, -1e30)
+    else:
+        mask = (kj < pos)
+        win = jnp.asarray(window)
+        mask = mask & jnp.where(win > 0, kj > pos - win, True)   # (T,)
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
     s_new = jnp.einsum("bkgd,bkd->bkg", qg, k_new[:, 0],
                        preferred_element_type=jnp.float32) * scale
     m = jnp.maximum(jnp.max(sc, axis=-1), s_new)                 # (b,k,g)
@@ -367,14 +416,32 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
               q_offset=0, window=0, prefix_len=0,
               cache: Optional[Params] = None,
               decode_slab: bool = False,
+              kv_start=0,
               ) -> Tuple[jax.Array, jax.Array, Optional[Params]]:
     """Pre-norm GQA attention block. Returns (out, recon, new_cache).
 
-    cache layout per cfg.head_layout:
-      "heads": {"k": (B, T, KVH, D), ...};  "hd": {"k": (B, T, D, KVH), ...}
-    New K/V are written at q_offset. With ``decode_slab`` (single-token
-    decode), the cache is consumed read-only and new_cache is just the
-    new-token {"k": (B,1,...), "v": ...} slab.
+    Args:
+      p: layer params {"wq","wk","wv","wo","norm"} (LutLinear pytrees).
+      x: (B, S, D) residual-stream input.
+      q_offset: absolute position of the first query — a scalar, or a
+        (B,) array of per-row positions (continuous-batching decode,
+        where every slot sits at a different sequence length). Per-row
+        offsets are only supported on the ``decode_slab`` path.
+      window: 0 = global attention, >0 = sliding window of that width.
+      prefix_len: positions < prefix_len attend bidirectionally (VLM).
+      cache: KV cache per cfg.head_layout —
+        "heads": {"k": (B, T, KVH, HD), ...}; "hd": {"k": (B, T, HD, KVH)}.
+        New K/V are written at q_offset (scalar offsets only).
+      decode_slab: single-token decode — the cache is consumed strictly
+        read-only and new_cache is just the new-token
+        {"k": (B, 1, KVH, HD), "v": ...} slab (the caller owns the write,
+        e.g. a paged-cache scatter at per-slot positions).
+      kv_start: scalar or (B,) — cache rows < kv_start are masked out
+        (the left-pad convention: batch-to-completion engines right-align
+        prompts, so rows [0, pad_len) hold pad garbage that must never be
+        attended; see docs/serving.md).
+
+    Returns: (out (B, S, D), recon scalar, new_cache or slab or None).
     """
     b, s, _ = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -382,7 +449,11 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
     q, r1 = proj(p["wq"], xn, qc)
     k, r2 = proj(p["wk"], xn, qc)
     v, r3 = proj(p["wv"], xn, qc)
-    positions = (jnp.arange(s) + q_offset)[None, :]              # (1, S)
+    qo = jnp.asarray(q_offset)
+    if qo.ndim == 0:
+        positions = (jnp.arange(s) + q_offset)[None, :]          # (1, S)
+    else:                                                        # (B, S)
+        positions = qo[:, None] + jnp.arange(s)[None, :]
     if cfg.head_layout == "hd":
         # hd-major: projection columns are (hd, head) ordered; the reshape
         # is shard-aligned with the column-parallel weight sharding.
@@ -400,7 +471,7 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
         out = _sdpa_decode_combine(q, cache["k"].astype(x.dtype),
                                    cache["v"].astype(x.dtype),
                                    k.astype(x.dtype), v.astype(x.dtype),
-                                   q_offset, window)
+                                   q_offset, window, kv_start=kv_start)
         out, r4 = proj(p["wo"], out, qc)
         slab = {"k": k.astype(cache["k"].dtype),
                 "v": v.astype(cache["v"].dtype)}
@@ -421,7 +492,8 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
     if (isinstance(window, int) and window > 0 and s > 1
             and isinstance(q_offset, int) and q_offset == 0
             and s % window == 0 and isinstance(prefix_len, int)
-            and prefix_len == 0 and cfg.head_layout != "hd"):
+            and prefix_len == 0 and cfg.head_layout != "hd"
+            and _trivial_start(kv_start)):
         out = _sdpa_local(q, k_fresh, v_fresh, window).reshape(b, s, h * hd)
         out, r4 = proj(p["wo"], out, qc)
         return out, r1 + r2 + r3 + r4, new_cache
@@ -432,6 +504,9 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
     # over the sharded T (flash-decoding semantics for free). [§Perf I4]
     impl = "naive" if s == 1 else cfg.attn_impl
     if cfg.head_layout == "hd":
+        if not _trivial_start(kv_start):
+            raise NotImplementedError(
+                "kv_start masking is not supported for head_layout='hd'")
         out = _sdpa_hd(q, k, v, q_offset, window, prefix_len,
                        impl, cfg.attn_chunk)
     else:
@@ -444,7 +519,7 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
             v = jax.lax.with_sharding_constraint(v, specs["kv"])
         out = _sdpa(q, k, v, q_offset, window, prefix_len,
                     impl, cfg.attn_chunk,
-                    ulysses=specs if apply_u else None)
+                    ulysses=specs if apply_u else None, kv_start=kv_start)
         if apply_u:                            # all-to-all back to hd-shard
             out = jax.lax.with_sharding_constraint(out, specs["out"])
         out = out.reshape(b, s, h * hd)

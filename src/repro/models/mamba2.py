@@ -63,11 +63,15 @@ def _split_in_proj(zxbcdt, cfg):
 
 
 def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
-                 state: Optional[jax.Array] = None
+                 state: Optional[jax.Array] = None,
+                 valid_len: Optional[jax.Array] = None,
                  ) -> Tuple[jax.Array, jax.Array]:
     """Depthwise causal conv1d. xbc (B, S, C), w (K, C).
 
     state (B, K-1, C) carries the trailing inputs for decode continuity.
+    valid_len: optional scalar — when the tail of xbc is right-padding
+    (chunked prefill), the carried state must be the trailing K-1 *real*
+    inputs, i.e. the window ending at position valid_len, not at S.
     Returns (out (B, S, C), new_state (B, K-1, C))."""
     kk = w.shape[0]
     if state is None:
@@ -75,7 +79,14 @@ def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
     xpad = jnp.concatenate([state, xbc], axis=1)               # (B, S+K-1, C)
     out = sum(xpad[:, i:i + xbc.shape[1], :] * w[i][None, None]
               for i in range(kk))
-    new_state = xpad[:, -(kk - 1):, :] if kk > 1 else state
+    if kk <= 1:
+        new_state = state
+    elif valid_len is None:
+        new_state = xpad[:, -(kk - 1):, :]
+    else:
+        # real inputs occupy xpad[:, :valid_len + kk - 1]; keep its tail
+        new_state = jax.lax.dynamic_slice_in_dim(
+            xpad, valid_len, kk - 1, axis=1)
     return jax.nn.silu(out + b[None, None]), new_state
 
 
@@ -147,11 +158,18 @@ def ssd_chunked(x, dt, a_log, bmat, cmat, d_skip, chunk: int = 128,
 
 def mamba2_block(p: Params, x: jax.Array, cfg, qc: QuantConfig,
                  cache: Optional[Params] = None,
+                 valid_len: Optional[jax.Array] = None,
                  ) -> Tuple[jax.Array, jax.Array, Optional[Params]]:
     """Full Mamba2 block (train/prefill path). x (B, S, D).
 
     cache: {"conv": (B, K-1, C), "h": (B, H, P, N)} — carried for prefill
     continuity and populated for subsequent decode.
+    valid_len: optional scalar — positions >= valid_len are right-padding
+    (chunked prefill). Unlike attention (where pads are masked out of the
+    score matrix), an SSM *integrates* every input into its state, so pads
+    must be made recurrence-neutral: their dt is forced to 0 (decay
+    ``exp(-A·0) = 1``, input weight ``dt·x = 0`` — an exact no-op on ``h``)
+    and the conv window state is taken at the last real token.
     Returns (out, recon, new_cache).
     """
     b, s, d = x.shape
@@ -161,12 +179,16 @@ def mamba2_block(p: Params, x: jax.Array, cfg, qc: QuantConfig,
     zxbcdt, r1 = proj(p["in_proj"], xn, qc)
     z, xbc, dt = _split_in_proj(zxbcdt, cfg)
     conv_state = cache["conv"] if cache is not None else None
-    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state,
+                                 valid_len=valid_len)
     xs = xbc[..., :cfg.d_inner].reshape(b, s, h, pdim)
     bmat = xbc[..., cfg.d_inner:cfg.d_inner + g * n].reshape(b, s, g, n)
     cmat = xbc[..., cfg.d_inner + g * n:].reshape(b, s, g, n)
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32))     # (B,S,H)
+    if valid_len is not None:
+        live = (jnp.arange(s) < valid_len)[None, :, None]        # (1,S,1)
+        dt = jnp.where(live, dt, 0.0)
     h0 = cache["h"] if cache is not None else None
     y, h_final = ssd_chunked(xs, dt, p["A_log"], bmat, cmat, p["D"],
                              chunk=128, h0=h0)

@@ -143,8 +143,21 @@ class Model:
     # ------------------------------------------------------------------
     def _run_blocks(self, params: Params, x: jax.Array, qc: QuantConfig,
                     q_offset, prefix_len,
-                    cache: Optional[Params] = None):
-        """Scan over the layer stack. Returns (x, recon, moe_aux, new_cache)."""
+                    cache: Optional[Params] = None,
+                    kv_start=0, valid_len=None, return_slabs: bool = False):
+        """Scan over the layer stack. Returns (x, recon, moe_aux, new_cache).
+
+        q_offset: scalar, or (B,) per-row decode positions (paged serving).
+        kv_start: scalar or (B,) — mask cache rows < kv_start (left-padded
+          batch prompts; see ``layers.attention``).
+        valid_len: scalar — right-padded chunked prefill; only the SSM path
+          consumes it (attention pads are handled by causality + the
+          caller's write masking).
+        return_slabs: single-token decode only — return the per-layer
+          new-token KV slabs instead of writing them into ``cache`` at
+          ``q_offset`` (the paged-cache caller scatters them itself; this
+          is what makes per-slot write positions possible).
+        """
         cfg = self.cfg
         windows = self._windows()
         decode = cache is not None and x.shape[1] == 1
@@ -172,7 +185,8 @@ class Model:
                 a, r1, new_c = attention(p_l["attn"], h, cfg, qc,
                                          q_offset=q_offset, window=win,
                                          prefix_len=prefix_len, cache=c_l,
-                                         decode_slab=slab_mode)
+                                         decode_slab=slab_mode,
+                                         kv_start=kv_start)
                 h = h + a
                 if cfg.family == "moe":
                     f, r2, a2 = moe_ffn(p_l["moe"], h, cfg, qc)
@@ -293,6 +307,8 @@ class Model:
                 return x, recon, aux, new_cache
             x, recon, aux = carry
             if slab_mode:
+                if return_slabs:          # (L, B, 1, KVH, HD) per key
+                    return x, recon, aux, slabs
                 new_cache = {
                     key: jax.lax.dynamic_update_slice_in_dim(
                         cache[key], slabs[key], q_offset, axis=2)
@@ -327,7 +343,8 @@ class Model:
             if decode:
                 o, r, new_c = mamba2_decode(p_l, h, cfg, qc, c_l)
             else:
-                o, r, new_c = mamba2_block(p_l, h, cfg, qc, c_l)
+                o, r, new_c = mamba2_block(p_l, h, cfg, qc, c_l,
+                                           valid_len=valid_len)
             h = h + o
             recon = recon + r
 
@@ -350,7 +367,8 @@ class Model:
                     a, r1, new_a = attention(shared["attn"], h, cfg, qc,
                                              q_offset=q_offset, window=0,
                                              prefix_len=prefix_len, cache=c_a,
-                                             decode_slab=slab_mode)
+                                             decode_slab=slab_mode,
+                                             kv_start=kv_start)
                     h = h + a
                     f, r2 = mlp(shared["mlp"], h, cfg, qc)
                     h = h + f
@@ -400,12 +418,16 @@ class Model:
                 slot_layers = jnp.array(
                     [i for i, s in enumerate(self._attn_slot_list())
                      if s >= 0], jnp.int32)
+                slab_rows = {
+                    key: slabs[key][slot_layers].astype(
+                        attn_cache0[key].dtype)
+                    for key in ("k", "v")}       # (n_inv, B, 1, KVH, HD)
+                if return_slabs:
+                    return x, recon, aux, {"mamba": new_mamba,
+                                           "attn_slab": slab_rows}
                 attn_cache = {
                     key: jax.lax.dynamic_update_slice_in_dim(
-                        attn_cache0[key],
-                        slabs[key][slot_layers].astype(
-                            attn_cache0[key].dtype),
-                        q_offset, axis=2)
+                        attn_cache0[key], slab_rows[key], q_offset, axis=2)
                     for key in ("k", "v")}
             new_cache = (None if cache is None
                          else {"mamba": new_mamba, "attn": attn_cache})
@@ -486,33 +508,282 @@ class Model:
             "pos": pos}
 
     def prefill(self, params: Params, batch: Dict, cache: Params,
-                qc: QuantConfig = DENSE):
-        """Process the prompt; returns (next-token logits (B, V...), cache)."""
+                qc: QuantConfig = DENSE, pad_lens=None):
+        """Process the prompt; returns (next-token logits (B, V...), cache).
+
+        Args:
+          batch: {"tokens": (B, S)} (audio: "embeds"; vlm: + patch_embeds).
+          cache: dense cache from :meth:`init_cache`.
+          pad_lens: (B,) — prompts are LEFT-padded (right-aligned, the
+            batch-to-completion convention); cache rows < pad_lens[b] are
+            masked out of attention for row b. The continuous engine does
+            not use this entry point — its RIGHT-padded chunked prefill
+            goes through :meth:`prefill_paged`.
+        """
         x, prefix_len = self._embed(params, batch)
         s = x.shape[1]
+        kv_start = pad_lens if pad_lens is not None else 0
         x, _, _, new_layers = self._run_blocks(
             params, x, qc, q_offset=0, prefix_len=prefix_len,
-            cache=cache["layers"])
+            cache=cache["layers"], kv_start=kv_start)
         x = rms_norm(x[:, -1:], params["final_norm"], self.cfg.norm_eps)
         logits = self._head(params, x)[:, 0]
         return logits, {"layers": new_layers,
                         "pos": jnp.asarray(s, jnp.int32)}
 
     def decode(self, params: Params, tokens: jax.Array, cache: Params,
-               qc: QuantConfig = DENSE):
+               qc: QuantConfig = DENSE, pad_lens=None):
         """One decode step. tokens (B, 1) int32 (audio: embeds (B, 1, D);
-        vlm: text token ids). Returns (logits (B, V...), cache)."""
+        vlm: text token ids). Returns (logits (B, V...), cache).
+
+        pad_lens: (B,) — left-pad widths from a right-aligned batched
+        prefill; cache rows < pad_lens[b] stay masked during decode."""
         cfg = self.cfg
         pos = cache["pos"]
         if cfg.family == "audio":
             x = tokens.astype(self.dtype) @ params["in_proj"]
         else:
             x = params["embed"][tokens]
+        kv_start = pad_lens if pad_lens is not None else 0
         x, _, _, new_layers = self._run_blocks(
-            params, x, qc, q_offset=pos, prefix_len=0, cache=cache["layers"])
+            params, x, qc, q_offset=pos, prefix_len=0, cache=cache["layers"],
+            kv_start=kv_start)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._head(params, x)[:, 0]
         return logits, {"layers": new_layers, "pos": pos + 1}
+
+    # ------------------------------------------------------------------
+    # paged serving (continuous batching; see src/repro/serve/)
+    # ------------------------------------------------------------------
+    def init_paged_cache(self, num_slots: int, max_seq: int, page_size: int,
+                         num_pages: int, dtype=None) -> Params:
+        """Physical cache storage for the paged serving engine.
+
+        Attention families return a page pool ``{"k": (L, num_pages+1,
+        page_size, KVH, HD), "v": ...}`` — one extra *trash* page (the
+        last id) absorbs writes from padded / inactive positions. SSM
+        state is O(1) per sequence, so it stays slot-indexed
+        (``(L, num_slots, ...)``) and is recycled on eviction; the hybrid
+        family keeps its few shared-attention invocations slot-dense.
+        """
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        l, kvh, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        if cfg.family in ATTN_FAMILIES:
+            shape = (l, num_pages + 1, page_size, kvh, hd)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        mamba = {
+            "conv": jnp.zeros((l, num_slots, cfg.ssm_conv - 1, conv_dim),
+                              dtype),
+            "h": jnp.zeros((l, num_slots, cfg.ssm_nheads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32)}
+        if cfg.family == "ssm":
+            return mamba
+        # hybrid: slot-dense shared-attn cache with one extra TRASH row
+        # (index max_seq) absorbing writes from non-decoding lanes — the
+        # slot-dense analogue of the attention pool's trash page. Rows
+        # >= pos are never attended (kj < pos mask), so the extra row is
+        # invisible to reads.
+        n_inv = self.num_attn_slots
+        shape = (n_inv, num_slots, max_seq + 1, kvh, hd)
+        return {"mamba": mamba,
+                "attn": {"k": jnp.zeros(shape, dtype),
+                         "v": jnp.zeros(shape, dtype)}}
+
+    def _paged_view(self, kv: Params, phys: jax.Array):
+        """Gather pages into a dense (L, B, NP*page, KVH, HD) KV view.
+
+        phys: (B, NP) physical page ids (already trash-redirected)."""
+        l = kv["k"].shape[0]
+        ps = kv["k"].shape[2]
+        b, np_ = phys.shape
+        kvh, hd = kv["k"].shape[3], kv["k"].shape[4]
+
+        def view(pages):
+            return pages[:, phys].reshape(l, b, np_ * ps, kvh, hd)
+        return {"k": view(kv["k"]), "v": view(kv["v"])}
+
+    def prefill_paged(self, params: Params, tokens: jax.Array, kv: Params,
+                      page_table: jax.Array, slot, pos, valid_len,
+                      qc: QuantConfig = DENSE):
+        """One RIGHT-padded prefill chunk for a single slot.
+
+        Args:
+          tokens: (1, C) int32 — chunk of the prompt, right-padded to the
+            static chunk width C; only the first ``valid_len`` are real.
+          kv: paged cache pytree from :meth:`init_paged_cache`.
+          page_table: (num_slots, pages_per_slot) int32, -1 = unallocated.
+            Pages covering positions [0, pos+valid_len) of ``slot`` must
+            already be allocated.
+          slot: scalar slot index; pos: scalar absolute start position.
+
+        Returns (logits (1, V) at the last real token, updated kv).
+        Padded positions scatter to the trash page; the SSM path makes
+        them recurrence-neutral via ``valid_len`` (see mamba2_block).
+        """
+        cfg = self.cfg
+        if cfg.head_layout == "hd":
+            raise NotImplementedError("paged serving requires head_layout="
+                                      "'heads'")
+        if cfg.family in ("audio", "vlm"):
+            raise NotImplementedError(
+                "paged serving covers token-prompt families only")
+        x = params["embed"][tokens]
+        c = tokens.shape[1]
+        if cfg.family in ATTN_FAMILIES:
+            trash = kv["k"].shape[1] - 1
+            ps = kv["k"].shape[2]
+            row = jax.lax.dynamic_index_in_dim(page_table, slot, 0,
+                                               keepdims=False)    # (NP,)
+            phys = jnp.where(row >= 0, row, trash)
+            view = self._paged_view(kv, phys[None])
+            x, _, _, new_view = self._run_blocks(
+                params, x, qc, q_offset=pos, prefix_len=0, cache=view)
+            # extract this chunk's fresh K/V rows and scatter them to pages
+            tok_pos = pos + jnp.arange(c)
+            page, off = tok_pos // ps, tok_pos % ps
+            live = jnp.arange(c) < valid_len
+            tgt = jnp.where(live, phys[page], trash)              # (C,)
+            new_kv = {}
+            for key in ("k", "v"):
+                rows = jax.lax.dynamic_slice_in_dim(
+                    new_view[key][:, 0], pos, c, axis=1)          # (L,C,..)
+                new_kv[key] = kv[key].at[:, tgt, off].set(rows)
+        else:
+            cache_view, write_back = self._slot_state_view(kv, slot, pos)
+            x, _, _, new_state = self._run_blocks(
+                params, x, qc, q_offset=pos, prefix_len=0,
+                cache=cache_view, valid_len=valid_len)
+            new_kv = write_back(new_state)
+        x_last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+        x_last = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x_last)[:, 0]
+        return logits, new_kv
+
+    def _slot_state_view(self, kv: Params, slot, pos):
+        """(B=1) view of one slot's recurrent state + write-back closure.
+
+        The first chunk of a new occupant (``pos == 0``) reads zeros
+        instead of the previous occupant's state — this is how evicted
+        Mamba2 state slots are recycled without a separate reset pass.
+        """
+        continuing = pos > 0                  # pos == 0 → recycled slot
+
+        def take(t):                          # (L, slots, ...) -> (L, 1, ...)
+            sl = jax.lax.dynamic_slice_in_dim(t, slot, 1, axis=1)
+            return jnp.where(continuing, sl, jnp.zeros_like(sl))
+
+        def put(t, new):
+            return jax.lax.dynamic_update_slice_in_dim(
+                t, new.astype(t.dtype), slot, axis=1)
+
+        if self.cfg.family == "ssm":
+            view = {"conv": take(kv["conv"]), "h": take(kv["h"])}
+
+            def write_back(new):
+                return {"conv": put(kv["conv"], new["conv"]),
+                        "h": put(kv["h"], new["h"])}
+            return view, write_back
+
+        # hybrid: recurrent mamba state + slot-dense shared-attn KV. The
+        # attention rows need no zeroing: chunk writes land at q_offset
+        # before any read, and decode masks rows >= pos.
+        attn_view = {key: jax.lax.dynamic_slice_in_dim(
+            kv["attn"][key], slot, 1, axis=1) for key in ("k", "v")}
+        view = {"mamba": {"conv": take(kv["mamba"]["conv"]),
+                          "h": take(kv["mamba"]["h"])},
+                "attn": attn_view}
+
+        def write_back(new):
+            return {"mamba": {"conv": put(kv["mamba"]["conv"],
+                                          new["mamba"]["conv"]),
+                              "h": put(kv["mamba"]["h"], new["mamba"]["h"])},
+                    "attn": {key: put(kv["attn"][key], new["attn"][key])
+                             for key in ("k", "v")}}
+        return view, write_back
+
+    def decode_paged(self, params: Params, tokens: jax.Array, kv: Params,
+                     page_table: jax.Array, positions: jax.Array,
+                     qc: QuantConfig = DENSE):
+        """One decode step over ALL slots at per-slot positions.
+
+        Args:
+          tokens: (num_slots, 1) int32 — inactive lanes carry a dummy id.
+          positions: (num_slots,) int32 sequence length of each DECODING
+            slot; lanes that are not decoding this step (free slots, but
+            also slots mid-prefill — whose pages hold real prompt KV that
+            must not be clobbered) carry -1. Row b's query gets RoPE
+            position positions[b] and attends cache rows < positions[b]
+            (none, for -1).
+          page_table: (num_slots, pages_per_slot) int32, -1 = unallocated.
+
+        Returns (logits (num_slots, V), updated kv). The new-token KV slab
+        is scattered at each decoding slot's own (page, offset); lanes
+        with positions < 0 scatter to the trash page (attention pool) /
+        trash row (hybrid slot-dense cache). SSM states of inactive lanes
+        do get garbage updates — harmless, because admission re-reads
+        them as zeros (see :meth:`_slot_state_view`).
+        """
+        cfg = self.cfg
+        if cfg.head_layout == "hd":
+            raise NotImplementedError("paged serving requires head_layout="
+                                      "'heads'")
+        if cfg.family in ("audio", "vlm"):
+            raise NotImplementedError(
+                "paged serving covers token-prompt families only")
+        b = tokens.shape[0]
+        x = params["embed"][tokens]
+        live = positions >= 0                 # decoding lanes only
+        pos_c = jnp.maximum(positions, 0)
+        if cfg.family in ATTN_FAMILIES:
+            trash = kv["k"].shape[1] - 1
+            ps = kv["k"].shape[2]
+            phys = jnp.where(page_table >= 0, page_table, trash)  # (B, NP)
+            view = self._paged_view(kv, phys)
+            x, _, _, slabs = self._run_blocks(
+                params, x, qc, q_offset=positions, prefix_len=0,
+                cache=view, return_slabs=True)
+            page, off = pos_c // ps, pos_c % ps
+            # non-decoding lanes MUST NOT write through their page table:
+            # a mid-prefill slot's pages hold real prompt KV.
+            tgt = jnp.where(live, phys[jnp.arange(b), page], trash)
+            new_kv = {key: kv[key].at[:, tgt, off].set(slabs[key][:, :, 0])
+                      for key in ("k", "v")}
+        elif cfg.family == "ssm":
+            x, _, _, upd = self._run_blocks(
+                params, x, qc, q_offset=positions, prefix_len=0, cache=kv)
+            # recurrent state is live for EVERY occupied lane (a slot
+            # mid-prefill carries real state between chunks): lanes that
+            # are not decoding keep their old state.
+            new_kv = _merge_live_states(kv, upd, live)
+        else:                                 # hybrid
+            x, _, _, upd = self._run_blocks(
+                params, x, qc, q_offset=positions, prefix_len=0,
+                cache=kv, return_slabs=True)
+            trash_row = kv["attn"]["k"].shape[2] - 1   # see init_paged_cache
+            row = jnp.where(live, pos_c, trash_row)
+            attn = {key: kv["attn"][key].at[:, jnp.arange(b), row].set(
+                        upd["attn_slab"][key][:, :, 0])
+                    for key in ("k", "v")}
+            new_kv = {"mamba": _merge_live_states(kv["mamba"], upd["mamba"],
+                                                  live),
+                      "attn": attn}
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x)[:, 0]
+        return logits, new_kv
+
+
+def _merge_live_states(old, new, live: jax.Array):
+    """Per-lane select on slot-indexed state pytrees.
+
+    old/new: trees of (L, num_slots, ...) arrays; live: (num_slots,) bool.
+    Lanes with live=False keep their old state — decode steps must not
+    clobber the recurrent state of slots that are mid-prefill."""
+    return jax.tree_util.tree_map(
+        lambda o, n: jnp.where(
+            live.reshape((1, -1) + (1,) * (o.ndim - 2)), n.astype(o.dtype), o),
+        old, new)
 
 
 @functools.lru_cache(maxsize=None)

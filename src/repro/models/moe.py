@@ -38,9 +38,17 @@ def init_expert_proj(key, e: int, k: int, n: int, qc: QuantConfig, dtype):
 
 def expert_proj(p: Params, x: jax.Array, qc: QuantConfig
                 ) -> Tuple[jax.Array, jax.Array]:
-    """Batched per-expert projection. x (E, Cap, K) -> (E, Cap, N).
+    """Batched per-expert projection.
 
-    Mirrors ``lut_linear_apply`` but vmapped over the expert dimension.
+    Args:
+      p: {"w": (E, K, N)} plus, in LUT modes, "z" (E, nc, c, v) and — after
+        ``precompute_model`` — "lut" (E, nc, c, N) / "lut_scale" (E, N).
+      x: (E, Cap, K) capacity-slotted expert buffers.
+      qc: operating point; in ``lut_infer`` the per-expert codebooks ride
+        the same fused/two-pass kernel dispatch as every other projection.
+
+    Returns: ((E, Cap, N) outputs, scalar recon loss — nonzero only in
+    ``lut_train``). Mirrors ``lut_linear_apply`` vmapped over experts.
     """
     zero = jnp.zeros((), jnp.float32)
     if qc.mode == "dense" or "z" not in p:
@@ -102,9 +110,15 @@ def init_moe(key, cfg, qc: QuantConfig, dtype):
 
 def moe_ffn(p: Params, x: jax.Array, cfg, qc: QuantConfig
             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Top-k routed MoE. x (B, S, D) -> (out, recon, aux_loss).
+    """Top-k routed MoE. x (B, S, D) -> (out (B, S, D), recon, aux_loss).
 
     aux_loss is the standard load-balancing loss (mean_e f_e * p_e * E).
+
+    Serving note: the capacity floor below makes tiny token counts —
+    decode steps from the serving engines, including the continuous
+    engine's (num_slots, 1) batches and (1, chunk) prefill chunks —
+    drop-free (cap == T guarantees every (token, choice) gets a slot), so
+    decode logits match the full-sequence forward exactly.
     """
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.top_k

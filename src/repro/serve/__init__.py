@@ -1,2 +1,22 @@
-"""Serving: batched request engine over prefill/decode steps."""
-from .engine import Engine, Request
+"""Serving: continuous-batching engine over a paged LUT-aware KV cache.
+
+Public surface:
+  * :class:`Engine` — slot-scheduled continuous batching (the default).
+  * :class:`BatchToCompletionEngine` — legacy fixed-batch baseline.
+  * :class:`Request` — one generation request.
+  * :class:`PagedKVCache` / :class:`PageAllocator` /
+    :class:`PagePoolExhausted` — the paged cache memory system.
+  * :class:`SlotScheduler` — admission / eviction / preemption policy.
+
+See docs/serving.md for the engine lifecycle and cache layout.
+"""
+from .engine import BatchToCompletionEngine, Engine, greedy_generate
+from .kv_cache import (PageAllocator, PagePoolExhausted, PagedKVCache,
+                       PageTable)
+from .scheduler import Request, Slot, SlotPhase, SlotScheduler
+
+__all__ = [
+    "BatchToCompletionEngine", "Engine", "greedy_generate",
+    "PageAllocator", "PagePoolExhausted", "PagedKVCache", "PageTable",
+    "Request", "Slot", "SlotPhase", "SlotScheduler",
+]

@@ -1,18 +1,44 @@
-"""Batched serving engine.
+"""Serving engines.
 
-Continuous-batching-lite: requests are grouped into fixed-size batches,
-prefilled together (right-padded), then decoded step-by-step with per-slot
-completion tracking. Works with sharded params/caches (pass `shardings`).
-Sampling: greedy or temperature.
+:class:`Engine` — the continuous-batching engine (the default):
 
-The paper's technique enters through ``qc``: with ``mode="lut_infer"`` the
-engine runs assignment + LUT lookups instead of dense GEMMs (precomputed
-tables must already be in params — see ``repro.core.precompute_model``).
+  * slot-based scheduling: a request is admitted the moment a slot frees,
+    including mid-decode (``SlotScheduler``);
+  * chunked prefill: prompts are processed in fixed-width right-padded
+    chunks of ``prefill_chunk`` tokens, one chunk interleaved with each
+    decode step, so a long prompt never stalls running requests;
+  * block/paged KV cache: attention KV lives in fixed-size pages with
+    per-slot page tables (``PagedKVCache``), so cache memory scales with
+    live tokens rather than ``batch_size × max_seq``;
+  * per-slot decode positions: one jitted ``decode_paged`` step advances
+    every active slot at its own sequence length.
+
+:class:`BatchToCompletionEngine` — the legacy fixed-batch engine, kept as
+the measurable baseline for ``benchmarks/serve_bench.py``: requests are
+grouped into fixed batches, prefilled together and decoded until the
+*longest* request finishes (head-of-line blocking), with a dense
+``(batch, max_seq)`` cache.
+
+Padding conventions (see docs/serving.md):
+
+  * Continuous engine: prompts are RIGHT-padded per chunk. Pad positions
+    sit causally in the future of every real token, their KV is scattered
+    to the trash page, and decode masks cache rows ``>= pos`` — padded
+    positions are therefore never attended.
+  * Batch engine: prompts are LEFT-padded (right-aligned) so the batch
+    decodes from a uniform position. Pad rows occupy cache rows
+    ``[0, pad_len)`` and are attention-masked via ``pad_lens``
+    (historically they were NOT masked — fixed here). RoPE is relative,
+    so the uniform per-row shift of absolute positions is harmless.
+
+The paper's technique enters through ``qc``: with ``mode="lut_infer"``
+every projection runs assignment + LUT lookups (the fused CCM→IMM kernel
+path) instead of dense GEMMs — precomputed tables must already be in
+``params`` (see ``repro.core.precompute_model``).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -20,20 +46,267 @@ import numpy as np
 
 from repro.core.lut import DENSE, QuantConfig
 
+from .kv_cache import PagedKVCache, PagePoolExhausted
+from .scheduler import Request, SlotPhase, SlotScheduler
 
-@dataclasses.dataclass
-class Request:
-    tokens: List[int]
-    max_new_tokens: int = 32
-    temperature: float = 0.0
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+
+def _i32(x) -> jax.Array:
+    return jnp.asarray(x, jnp.int32)
+
+
+def _sample_tokens(key: jax.Array, logits: jax.Array,
+                   temps: Optional[jax.Array], slot_ids: Sequence[int]):
+    """Shared sampling helper. Returns (new_key, tokens (B,) int32).
+
+    Greedy where temperature <= 0, categorical over ``logits / T``
+    elsewhere. temps: (B,) fp32, or None when the whole batch is greedy
+    (no PRNG state is consumed then).
+
+    Per-slot PRNG: one subkey per call, folded with each row's *slot
+    index*, then one independent categorical draw per row — so identical
+    requests occupying different slots draw different samples (regression
+    test: test_serve_paged.py::test_identical_hot_requests_diverge).
+    Sample streams are NOT reproducible across batch compositions: how
+    often the key advances depends on engine scheduling.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if temps is None:
+        return key, greedy
+    key, sub = jax.random.split(key)
+    keys = jax.vmap(lambda i: jax.random.fold_in(sub, i))(_i32(list(slot_ids)))
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return key, jnp.where(temps > 0.0, sampled.astype(jnp.int32), greedy)
 
 
 class Engine:
+    """Continuous-batching engine over a paged KV cache.
+
+    Args:
+      model: ``repro.models.model.Model`` (token-prompt families:
+        dense / moe / ssm / hybrid; ``head_layout="heads"``).
+      params: model params pytree (LUT tables precomputed for
+        ``qc.mode == "lut_infer"``).
+      qc: quantisation operating point threaded through every projection.
+      batch_size: number of slots (max concurrently running requests).
+      max_seq: per-slot sequence capacity (rounded up to a page multiple).
+      eos_id: optional stop token.
+      seed: PRNG seed for sampling.
+      page_size: tokens per KV page.
+      num_pages: physical page-pool size; default ``slots ×
+        pages_per_slot`` (no oversubscription). Smaller pools admit fewer
+        concurrent tokens and may trigger preemption.
+      prefill_chunk: static prefill chunk width (must divide max_seq).
+    """
+
+    def __init__(self, model, params, qc: QuantConfig = DENSE,
+                 batch_size: int = 8, max_seq: int = 512,
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefill_chunk: int = 32):
+        self.model = model
+        self.params = params
+        self.qc = qc
+        self.num_slots = batch_size
+        max_seq = -(-max_seq // page_size) * page_size   # round up to pages
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.key = jax.random.PRNGKey(seed)
+        self.prefill_chunk = max(2, min(prefill_chunk, max_seq))
+        if max_seq % self.prefill_chunk:
+            raise ValueError(
+                f"prefill_chunk ({self.prefill_chunk}) must divide "
+                f"max_seq ({max_seq})")
+        self.kv = PagedKVCache(model, self.num_slots, max_seq,
+                               page_size=page_size, num_pages=num_pages)
+        self.scheduler = SlotScheduler(self.num_slots)
+        self.step_count = 0
+
+        self._jit_prefill = jax.jit(
+            lambda p, t, kv, pt, slot, pos, valid: model.prefill_paged(
+                p, t, kv, pt, slot, pos, valid, qc),
+            donate_argnums=(2,))
+        self._jit_decode = jax.jit(
+            lambda p, t, kv, pt, positions: model.decode_paged(
+                p, t, kv, pt, positions, qc),
+            donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+    def _sample(self, logits: jax.Array, temps: Optional[jax.Array],
+                slot_ids: Sequence[int]) -> jax.Array:
+        """One token per row via :func:`_sample_tokens` (per-slot keys)."""
+        self.key, toks = _sample_tokens(self.key, logits, temps, slot_ids)
+        return toks
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Enqueue a request; it is admitted as soon as a slot + pages free.
+
+        Raises :class:`PagePoolExhausted` immediately (before the request
+        enters the queue) if its prompt could never be served — so one
+        oversized request cannot abort a run with valid requests in
+        flight. A request whose *generation* outgrows an undersized page
+        pool later is finished as truncated, not errored (see
+        :meth:`_decode_step`)."""
+        self.kv.check_admissible(len(req.tokens))
+        self.scheduler.submit(req)
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve all requests to completion (continuous batching)."""
+        for r in requests:
+            self.submit(r)
+        self.run_until_idle()
+        return requests
+
+    def run_until_idle(self) -> None:
+        """Step until queue and slots are empty."""
+        while self.scheduler.has_work:
+            if not self.step():
+                raise RuntimeError("engine made no progress")  # unreachable
+
+    def step(self) -> bool:
+        """One engine iteration: admit, one prefill chunk, one decode step.
+
+        Running at most one prefill chunk per iteration bounds the decode
+        stall any prompt can cause to ``prefill_chunk`` tokens of work.
+        Returns False when there was nothing to do.
+        """
+        self.scheduler.admit(self.kv)
+        progressed = False
+        slot = self.scheduler.next_prefill()
+        if slot is not None:
+            self._prefill_chunk_step(slot)
+            progressed = True
+        if self.scheduler.decode_slots():
+            self._decode_step()
+            progressed = True
+        self.step_count += 1
+        return progressed
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+    def _ensure_pages(self, slot_idx: int, n_tokens: int) -> None:
+        """Grow a slot to n_tokens, preempting other slots if needed."""
+        while True:
+            try:
+                self.kv.ensure(slot_idx, n_tokens)
+                return
+            except PagePoolExhausted:
+                victim = self.scheduler.preempt_youngest(
+                    self.kv, exclude=slot_idx)
+                if victim is None:
+                    raise
+
+    def _prefill_chunk_step(self, slot) -> None:
+        c = self.prefill_chunk
+        chunk = self.scheduler.prompt_chunk(slot, c)
+        valid = len(chunk)
+        # prompt pages were committed in full by SlotScheduler.admit() —
+        # only decode grows a slot page-by-page
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :valid] = chunk
+        logits, self.kv.data = self._jit_prefill(
+            self.params, jnp.asarray(toks), self.kv.data,
+            self.kv.table_device(), _i32(slot.idx), _i32(slot.pos),
+            _i32(valid))
+        slot.pos += valid
+        if slot.pos < slot.prefill_len:
+            return
+        req = slot.req
+        temps = (jnp.asarray([req.temperature], jnp.float32)
+                 if req.temperature > 0.0 else None)
+        tok = int(self._sample(logits, temps, [slot.idx])[0])
+        self.scheduler.finish_prefill(slot, tok)
+        self._record_token(slot, tok)
+
+    def _decode_step(self) -> None:
+        for s in list(self.scheduler.decode_slots()):
+            if s.phase is not SlotPhase.DECODE:
+                continue          # preempted by an earlier ensure this loop
+            try:
+                # the page covering the write position must exist up front
+                self._ensure_pages(s.idx, s.pos + 1)
+            except PagePoolExhausted:
+                # no preemptable neighbour holds pages, so the pool can
+                # NEVER supply this sequence's next page (an undersized
+                # pool, not transient pressure): finish the request as
+                # truncated instead of aborting the whole run. The last
+                # sampled token is already in out_tokens and needs no
+                # cache write.
+                s.req.done = True
+                s.req.finish_step = self.step_count
+                self.scheduler.evict(s, self.kv)
+        dslots = self.scheduler.decode_slots()  # preemption may have culled
+        if not dslots:
+            return
+        b = self.num_slots
+        toks = np.zeros((b, 1), np.int32)
+        # -1 marks lanes that are NOT decoding this step (free slots and
+        # slots mid-prefill): decode_paged redirects their KV writes to
+        # the trash page/row instead of through their page tables.
+        positions = np.full((b,), -1, np.int32)
+        temps_h = np.zeros((b,), np.float32)
+        for s in dslots:
+            toks[s.idx, 0] = s.next_token
+            positions[s.idx] = s.pos
+            temps_h[s.idx] = s.req.temperature
+        temps = jnp.asarray(temps_h) if (temps_h > 0.0).any() else None
+        logits, self.kv.data = self._jit_decode(
+            self.params, jnp.asarray(toks), self.kv.data,
+            self.kv.table_device(), jnp.asarray(positions))
+        nxt = np.asarray(self._sample(logits, temps, range(b)))
+        for s in dslots:
+            s.pos += 1
+            self._record_token(s, int(nxt[s.idx]))
+
+    def _record_token(self, slot, tok: int) -> None:
+        """Append a sampled token and apply the eviction rules."""
+        req = slot.req
+        req.out_tokens.append(tok)
+        if req.first_token_step is None:
+            req.first_token_step = self.step_count
+        slot.next_token = tok
+        hit_eos = self.eos_id is not None and tok == self.eos_id
+        budget_done = len(req.out_tokens) >= req.max_new_tokens
+        truncated = slot.pos >= self.max_seq      # no room for another write
+        if hit_eos or budget_done or truncated:
+            req.done = True
+            req.finish_step = self.step_count
+            self.scheduler.evict(slot, self.kv)
+
+
+class BatchToCompletionEngine:
+    """Legacy fixed-batch engine (serve_bench baseline).
+
+    Requests are grouped into batches of ``batch_size``, prefilled together
+    (LEFT-padded / right-aligned) and decoded step-by-step until every
+    request in the batch finishes — the whole batch waits on its longest
+    member, and the dense cache is ``(batch, max_seq)`` regardless of
+    occupancy. Pad rows are attention-masked via ``pad_lens`` (see module
+    docstring). Attention-family models only (an SSM integrates pad inputs
+    into its state; use :class:`Engine`, which never left-pads).
+    """
+
     def __init__(self, model, params, qc: QuantConfig = DENSE,
                  batch_size: int = 8, max_seq: int = 512,
                  eos_id: Optional[int] = None, seed: int = 0):
+        if model.cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                "BatchToCompletionEngine left-pads prompts, which an SSM "
+                "would integrate into its state (kv_start only masks "
+                "attention); use the continuous Engine for "
+                f"family={model.cfg.family!r}")
+        if model.cfg.head_layout == "hd":
+            raise ValueError(
+                "BatchToCompletionEngine needs kv_start masking for "
+                "mixed-length batches, which head_layout='hd' does not "
+                "implement — the failure would otherwise be data-dependent "
+                "(first unequal-length batch)")
         self.model = model
         self.params = params
         self.qc = qc
@@ -43,26 +316,20 @@ class Engine:
         self.key = jax.random.PRNGKey(seed)
 
         self._prefill = jax.jit(
-            lambda p, b, c: model.prefill(p, b, c, qc))
+            lambda p, b, c, pl: model.prefill(p, b, c, qc, pad_lens=pl))
         self._decode = jax.jit(
-            lambda p, t, c: model.decode(p, t, c, qc),
+            lambda p, t, c, pl: model.decode(p, t, c, qc, pad_lens=pl),
             donate_argnums=(2,))
 
     def _sample(self, logits: jax.Array,
                 temps: Optional[jax.Array]) -> jax.Array:
-        """Per-slot sampling: greedy where temperature <= 0, categorical
-        (logits / T) elsewhere. temps: (B,) fp32 device array, or None
-        when the whole batch is greedy."""
-        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        if temps is None:
-            return greedy
-        self.key, sub = jax.random.split(self.key)
-        scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
-        sampled = jax.random.categorical(sub, scaled, axis=-1).astype(jnp.int32)
-        return jnp.where(temps > 0.0, sampled, greedy)
+        """Per-row sampling via :func:`_sample_tokens` (row index = slot)."""
+        self.key, toks = _sample_tokens(
+            self.key, logits, temps, range(logits.shape[0]))
+        return toks
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve all requests (in batches of `batch_size`)."""
+        """Serve all requests (in submission-order batches of batch_size)."""
         for i in range(0, len(requests), self.batch_size):
             self._run_batch(requests[i:i + self.batch_size])
         return requests
@@ -71,19 +338,28 @@ class Engine:
         b = len(reqs)
         pad_b = self.batch_size
         max_prompt = max(len(r.tokens) for r in reqs)
+        if max_prompt > self.max_seq:
+            raise ValueError(
+                f"prompt of {max_prompt} tokens exceeds max_seq="
+                f"{self.max_seq}")
         toks = np.zeros((pad_b, max_prompt), np.int32)
+        pad_h = np.full((pad_b,), max_prompt, np.int32)  # empty rows: all pad
         for j, r in enumerate(reqs):
-            # left-pad? right-align prompts so decode starts uniformly
+            # left-pad / right-align so the batch decodes from one position
             toks[j, max_prompt - len(r.tokens):] = r.tokens
+            pad_h[j] = max_prompt - len(r.tokens)
+        # uniform-length batches need no mask: pass None so the model keeps
+        # the static kv_start==0 fast path (identical HLO to the original
+        # engine; filler rows b..pad_b are discarded anyway)
+        pad_lens = jnp.asarray(pad_h) if pad_h[:b].any() else None
         cache = self.model.init_cache(pad_b, self.max_seq)
         logits, cache = self._prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, cache)
+            self.params, {"tokens": jnp.asarray(toks)}, cache, pad_lens)
 
         active = np.ones(pad_b, bool)
         active[b:] = False
         max_new = max(r.max_new_tokens for r in reqs)
-        # per-request temperature (padding slots decode greedily — discarded);
-        # moved to device once, not per decode step
+        # per-request temperature, moved to device once (not per step)
         temps_h = np.zeros(pad_b, np.float32)
         temps_h[:b] = [r.temperature for r in reqs]
         temps = jnp.asarray(temps_h) if (temps_h > 0.0).any() else None
@@ -100,8 +376,11 @@ class Engine:
                         active[j] = False
             if not active[:b].any():
                 break
+            if max_prompt + step >= self.max_seq:
+                break             # cache full: truncate instead of letting
+                #                   clamped writes silently corrupt row T-1
             logits, cache = self._decode(
-                self.params, jnp.asarray(np_tok)[:, None], cache)
+                self.params, jnp.asarray(np_tok)[:, None], cache, pad_lens)
             next_tok = self._sample(logits, temps)
         for r in reqs:
             r.done = True
@@ -109,7 +388,9 @@ class Engine:
 
 def greedy_generate(model, params, prompt_tokens, n_new: int,
                     qc: QuantConfig = DENSE, max_seq: int = 256):
-    """Convenience one-shot generation (tests/examples)."""
+    """Convenience one-shot greedy generation (tests/examples).
+
+    Returns the list of ``n_new`` generated token ids."""
     eng = Engine(model, params, qc, batch_size=1, max_seq=max_seq)
     req = Request(tokens=list(prompt_tokens), max_new_tokens=n_new)
     eng.run([req])

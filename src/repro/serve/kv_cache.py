@@ -1,0 +1,237 @@
+"""Block/paged KV cache for the continuous-batching engine.
+
+The serving memory system is split into three layers (see docs/serving.md):
+
+  * :class:`PageAllocator` — a host-side free-list over physical page ids.
+    Pure Python, no device state; raises :class:`PagePoolExhausted` when a
+    request cannot be satisfied.
+  * :class:`PageTable`   — host-side slot→page bookkeeping: one row of
+    logical-page → physical-page ids per slot (``-1`` = unallocated), grown
+    lazily as a slot's sequence crosses page boundaries.
+  * :class:`PagedKVCache` — the device arrays (built by
+    ``Model.init_paged_cache``) plus a :class:`PageTable`. KV for the
+    attention families lives in a shared physical pool of fixed-size pages,
+    so HBM scales with *live tokens* across all slots instead of
+    ``num_slots × max_seq``. Mamba2 states are O(1) per slot and are
+    stored slot-indexed (no paging); they are recycled when a slot is
+    evicted (the first prefill chunk of the next occupant resets them).
+
+One extra physical page (the last one, never handed out by the allocator)
+serves as a *trash page*: scatter targets for padded prefill positions and
+for inactive decode slots are redirected there, so no masking is needed on
+the write path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagePoolExhausted(RuntimeError):
+    """Raised when a page allocation cannot be satisfied.
+
+    Carries a human-readable account of the pool state so serving errors
+    surface as capacity problems, not shape errors deep inside jit.
+    """
+
+
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` physical page ids.
+
+    Pages are plain ints in ``[0, num_pages)``. ``alloc`` is all-or-nothing:
+    it either returns exactly ``n`` page ids or raises
+    :class:`PagePoolExhausted` without allocating anything.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages <= 0:
+            raise ValueError(f"num_pages must be positive, got {num_pages}")
+        self.num_pages = num_pages
+        # pop() from the tail → pages are handed out in ascending id order.
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+
+    @property
+    def available(self) -> int:
+        """Number of pages currently free."""
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` pages; raises PagePoolExhausted if short."""
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"requested {n} page(s) but only {self.available} of "
+                f"{self.num_pages} are free")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: List[int]) -> None:
+        """Return pages to the pool (idempotence is NOT checked)."""
+        for p in pages:
+            if not (0 <= p < self.num_pages):
+                raise ValueError(f"freeing invalid page id {p}")
+        self._free.extend(pages)
+
+
+class PageTable:
+    """Host-side slot → physical-page mapping.
+
+    Row ``s`` maps slot ``s``'s logical pages (token positions
+    ``[i*page_size, (i+1)*page_size)``) to physical page ids; ``-1`` marks
+    an unallocated logical page. The device copy is cached and invalidated
+    on every mutation (allocation happens a few times per request, not per
+    token, so the host→device transfers are rare and tiny).
+    """
+
+    def __init__(self, num_slots: int, max_seq: int, page_size: int,
+                 num_pages: Optional[int] = None):
+        if max_seq % page_size:
+            raise ValueError(
+                f"max_seq ({max_seq}) must be a multiple of page_size "
+                f"({page_size})")
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.pages_per_slot = max_seq // page_size
+        if num_pages is None:
+            num_pages = num_slots * self.pages_per_slot
+        self.allocator = PageAllocator(num_pages)
+        self.table = np.full((num_slots, self.pages_per_slot), -1, np.int32)
+        self._slot_pages: List[List[int]] = [[] for _ in range(num_slots)]
+        self._dev: Optional[jnp.ndarray] = None
+
+    # -- capacity queries ---------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` tokens."""
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    def can_fit(self, n_tokens: int) -> bool:
+        """Whether ``n_tokens`` *new* tokens' pages could be allocated now."""
+        return self.pages_for(n_tokens) <= self.allocator.available
+
+    def check_admissible(self, n_tokens: int) -> None:
+        """Raise if a request of ``n_tokens`` could NEVER be served.
+
+        Catches both per-slot overflow (prompt longer than ``max_seq``) and
+        pool overflow (prompt needs more pages than exist), so impossible
+        requests fail loudly instead of deadlocking the admission queue.
+        """
+        if n_tokens > self.max_seq:
+            raise PagePoolExhausted(
+                f"request of {n_tokens} tokens exceeds max_seq="
+                f"{self.max_seq} (pages_per_slot={self.pages_per_slot})")
+        if self.pages_for(n_tokens) > self.allocator.num_pages:
+            raise PagePoolExhausted(
+                f"request of {n_tokens} tokens needs "
+                f"{self.pages_for(n_tokens)} pages but the pool only has "
+                f"{self.allocator.num_pages}")
+
+    # -- mutation -----------------------------------------------------------
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow slot ``slot`` to cover token positions ``[0, n_tokens)``.
+
+        Allocates the missing logical pages (all-or-nothing); raises
+        :class:`PagePoolExhausted` when the pool cannot supply them — the
+        caller decides whether to wait, or preempt a slot.
+        """
+        need = self.pages_for(n_tokens)
+        if need > self.pages_per_slot:
+            raise PagePoolExhausted(
+                f"slot {slot}: {n_tokens} tokens exceed max_seq="
+                f"{self.max_seq}")
+        have = len(self._slot_pages[slot])
+        if need <= have:
+            return
+        new = self.allocator.alloc(need - have)
+        for i, p in enumerate(new):
+            self.table[slot, have + i] = p
+        self._slot_pages[slot].extend(new)
+        self._dev = None
+
+    def release(self, slot: int) -> None:
+        """Evict a slot: return its pages to the pool, clear its row."""
+        if self._slot_pages[slot]:
+            self.allocator.free(self._slot_pages[slot])
+            self._slot_pages[slot] = []
+            self.table[slot, :] = -1
+            self._dev = None
+
+    # -- device view --------------------------------------------------------
+    def device(self) -> jnp.ndarray:
+        """(num_slots, pages_per_slot) int32 device copy (cached)."""
+        if self._dev is None:
+            self._dev = jnp.asarray(self.table)
+        return self._dev
+
+    @property
+    def live_pages(self) -> int:
+        return self.allocator.in_use
+
+
+class PagedKVCache:
+    """Device cache arrays + page table for one serving engine instance.
+
+    ``data`` is the pytree returned by ``Model.init_paged_cache``:
+
+      * attention families: ``{"k": (L, P+1, page, KVH, HD), "v": ...}``
+        where ``P`` is the physical pool size and the final page is the
+        trash page (see module docstring).
+      * ssm: ``{"conv": (L, slots, K-1, C), "h": (L, slots, H, HP, N)}`` —
+        slot-indexed recurrent state, recycled on eviction.
+      * hybrid: ``{"mamba": {...}, "attn": {"k": (n_inv, slots, T, KVH,
+        HD), ...}}`` — the handful of shared-attention invocations keep a
+        slot-dense cache (documented trade-off in docs/serving.md).
+
+    The engine passes ``data`` and ``table.device()`` into jitted
+    prefill/decode functions and stores the updated ``data`` back.
+    """
+
+    def __init__(self, model, num_slots: int, max_seq: int,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 dtype=None):
+        from repro.models.model import ATTN_FAMILIES
+        self.cfg = model.cfg
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.paged = model.cfg.family in ATTN_FAMILIES
+        self.table = PageTable(num_slots, max_seq, page_size, num_pages)
+        self.data: Dict[str, Any] = model.init_paged_cache(
+            num_slots, max_seq, page_size,
+            num_pages=self.table.allocator.num_pages, dtype=dtype)
+
+    # Paging only applies to the attention families; ssm/hybrid slots hold
+    # constant-size state, so capacity checks are trivially true there.
+    def pages_for(self, n: int) -> int:
+        return self.table.pages_for(n) if self.paged else 0
+
+    def can_fit(self, n_tokens: int) -> bool:
+        return self.table.can_fit(n_tokens) if self.paged else True
+
+    def check_admissible(self, n_tokens: int) -> None:
+        if n_tokens > self.max_seq:
+            raise PagePoolExhausted(
+                f"request of {n_tokens} tokens exceeds max_seq="
+                f"{self.max_seq}")
+        if self.paged:
+            self.table.check_admissible(n_tokens)
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        if self.paged:
+            self.table.ensure(slot, n_tokens)
+
+    def release(self, slot: int) -> None:
+        if self.paged:
+            self.table.release(slot)
+
+    def table_device(self) -> jnp.ndarray:
+        return self.table.device()
+
+    @property
+    def live_pages(self) -> int:
+        return self.table.live_pages if self.paged else 0

@@ -1,0 +1,208 @@
+"""Slot-level scheduler for continuous batching.
+
+The scheduler is pure host-side policy: it never touches device arrays.
+It owns a FIFO waiting queue and ``num_slots`` slots, each a small state
+machine::
+
+    FREE ──admit──▶ PREFILL ──last chunk──▶ DECODE ──EOS/max_new──▶ FREE
+                       ▲                       │
+                       └────── preempt ◀───────┘   (pages reclaimed,
+                                                    request re-queued with
+                                                    its generated tokens
+                                                    folded into the prompt)
+
+Admission happens *the moment a slot frees* — including mid-decode — as
+long as the page pool can hold the request's prompt. Prefill is chunked
+(the engine interleaves one chunk with one decode step), so a long prompt
+never stalls decoding for the slots already running.
+
+Eviction rules (``docs/serving.md`` has the worked trace):
+  * EOS sampled (when ``eos_id`` is configured)         → evict, free pages.
+  * ``len(out_tokens) == max_new_tokens``               → evict, free pages.
+  * sequence hit ``max_seq``                            → evict (truncated).
+  * page pool exhausted mid-decode                      → preempt the
+    youngest decoding slot (recompute-style: its prompt + generated tokens
+    re-enter the waiting queue, nothing is lost).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Deque, List, Optional
+
+from .kv_cache import PagedKVCache, PagePoolExhausted
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    Attributes:
+      tokens: prompt token ids.
+      max_new_tokens: generation budget.
+      temperature: 0 = greedy; >0 = categorical over logits/T.
+      out_tokens: generated ids (appended by the engine).
+      done: set once the request finishes (EOS / budget / truncation).
+      arrival / first_token_step / finish_step: engine-step timestamps for
+        latency reporting (arrival is caller-settable; see serve_demo).
+    """
+    tokens: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    arrival: Optional[int] = None
+    first_token_step: Optional[int] = None
+    finish_step: Optional[int] = None
+
+
+class SlotPhase(enum.Enum):
+    FREE = "free"
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+
+@dataclasses.dataclass
+class Slot:
+    """One batch lane. ``pos`` counts the tokens whose KV/state is cached;
+    ``next_token`` is the sampled-but-not-yet-decoded token id."""
+    idx: int
+    phase: SlotPhase = SlotPhase.FREE
+    req: Optional[Request] = None
+    pos: int = 0
+    prefill_len: int = 0          # prompt length incl. re-queued tokens
+    next_token: Optional[int] = None
+
+    @property
+    def free(self) -> bool:
+        return self.phase is SlotPhase.FREE
+
+
+class SlotScheduler:
+    """Admission / eviction / preemption policy over a fixed slot set."""
+
+    def __init__(self, num_slots: int):
+        self.slots = [Slot(i) for i in range(num_slots)]
+        self.waiting: Deque[Request] = deque()
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Enqueue a request (FIFO)."""
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(not s.free for s in self.slots)
+
+    def prefill_slots(self) -> List[Slot]:
+        return [s for s in self.slots if s.phase is SlotPhase.PREFILL]
+
+    def decode_slots(self) -> List[Slot]:
+        return [s for s in self.slots if s.phase is SlotPhase.DECODE]
+
+    # -- admission ----------------------------------------------------------
+    def admit(self, kv: PagedKVCache) -> List[Slot]:
+        """Move waiting requests into free slots while pages allow.
+
+        Called at the top of every engine step, so a request is admitted on
+        the very step its slot was evicted (admission mid-decode). Stops at
+        the first request whose prompt pages don't fit *right now* (FIFO —
+        no reordering, so no starvation). Raises :class:`PagePoolExhausted`
+        via ``check_admissible`` for requests that could never fit.
+        """
+        admitted: List[Slot] = []
+        for slot in self.slots:
+            if not self.waiting:
+                break
+            if not slot.free:
+                continue
+            req = self.waiting[0]
+            prompt = list(req.tokens) + list(req.out_tokens)
+            # The prompt itself must fit; a prompt of exactly max_seq is
+            # still servable (it truncates after its first sampled token —
+            # the engine's eviction rule), and a preempted request can
+            # legitimately come back at that boundary.
+            kv.check_admissible(len(prompt))
+            if not kv.can_fit(len(prompt)):
+                break                              # wait for evictions
+            self.waiting.popleft()
+            kv.ensure(slot.idx, len(prompt))
+            slot.req = req
+            slot.phase = SlotPhase.PREFILL
+            slot.pos = 0
+            slot.prefill_len = len(prompt)
+            slot.next_token = None
+            admitted.append(slot)
+        if (self.waiting and not admitted
+                and all(s.free for s in self.slots)):
+            # nothing running, nothing admitted: the head request can never
+            # be served (pool fragmentation is impossible — pages are unit-
+            # size — so this is a genuine capacity error).
+            req = self.waiting[0]
+            n = len(req.tokens) + len(req.out_tokens)
+            raise PagePoolExhausted(
+                f"request with {n} prompt tokens cannot be admitted on an "
+                f"idle engine (pool: {kv.table.allocator.num_pages} pages "
+                f"of {kv.page_size} tokens)" if kv.paged else
+                f"request with {n} prompt tokens cannot be admitted "
+                f"(max_seq={kv.max_seq})")
+        return admitted
+
+    # -- prefill ------------------------------------------------------------
+    def next_prefill(self) -> Optional[Slot]:
+        """Slot to run the next prefill chunk for (lowest remaining first,
+        so short prompts reach decode — and free their lane — sooner)."""
+        cands = self.prefill_slots()
+        if not cands:
+            return None
+        return min(cands, key=lambda s: (s.prefill_len - s.pos, s.idx))
+
+    def prompt_chunk(self, slot: Slot, chunk: int) -> List[int]:
+        """The next ``chunk`` prompt tokens for a PREFILL slot (unpadded).
+
+        A preempted request's already-generated tokens are part of the
+        prompt here — recompute-style resumption."""
+        prompt = list(slot.req.tokens) + list(slot.req.out_tokens)
+        return prompt[slot.pos:slot.pos + chunk]
+
+    def finish_prefill(self, slot: Slot, first_token: int) -> None:
+        """Prefill complete: switch to DECODE with the sampled token."""
+        slot.phase = SlotPhase.DECODE
+        slot.next_token = int(first_token)
+
+    # -- eviction / preemption ----------------------------------------------
+    def evict(self, slot: Slot, kv: PagedKVCache) -> None:
+        """Release a finished slot: pages back to the pool, slot FREE.
+
+        The Mamba2 state needs no reset here — the next occupant's first
+        prefill chunk reads zeros (``Model._slot_state_view``)."""
+        kv.release(slot.idx)
+        slot.req = None
+        slot.phase = SlotPhase.FREE
+        slot.pos = 0
+        slot.prefill_len = 0
+        slot.next_token = None
+
+    def preempt_youngest(self, kv: PagedKVCache,
+                         exclude: Optional[int] = None) -> Optional[Slot]:
+        """Reclaim pages by preempting the occupied slot with the fewest
+        cached tokens (least recompute lost) — decoding or still
+        prefilling (a prefilling slot can hold several prompt pages and
+        must be preemptible, or a decode step that needs one page with
+        only prefill neighbours would dead-end). The request re-enters
+        the waiting queue at the FRONT, keeping FIFO completion order
+        close; generated tokens (if any) are folded into the prompt on
+        re-admission, so nothing is lost.
+
+        exclude: slot index that must not be preempted (the slot the pages
+        are being reclaimed *for*)."""
+        cands = [s for s in self.slots
+                 if not s.free and s.idx != exclude]
+        if not cands:
+            return None
+        victim = min(cands, key=lambda s: (s.pos, -s.idx))
+        req = victim.req
+        self.waiting.appendleft(req)
+        self.evict(victim, kv)
+        return victim
