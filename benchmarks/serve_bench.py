@@ -11,10 +11,19 @@ Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--smoke]
 ``--smoke`` uses the CPU smoke config, asserts the continuous engine wins
 by >= 1.3x tokens/s (the acceptance floor; typical margin is ~2x), and is
 wired into CI so the serving A/B cannot bit-rot.
+
+``--sharded`` adds a tensor-parallel row: the same workload through
+``Engine(mesh=...)`` over all visible devices, token-checked against the
+single-device continuous run. On a CPU host pass ``--devices N`` to
+re-exec with N forced host devices (XLA host-platform override) — the row
+then measures dispatch overhead, not real TP speedup (host "devices" share
+the same cores; see docs/serving.md §Sharded serving).
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import jax
@@ -54,7 +63,8 @@ def _run_timed(engine, reqs):
     return toks, dt
 
 
-def bench(slots: int, n_requests: int, max_seq: int, smoke: bool):
+def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
+          sharded: bool = False, devices: int = 0):
     cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0), DENSE)
@@ -63,13 +73,30 @@ def bench(slots: int, n_requests: int, max_seq: int, smoke: bool):
         return BatchToCompletionEngine(model, params, DENSE,
                                        batch_size=slots, max_seq=max_seq)
 
-    def cont_engine():
+    def cont_engine(mesh=None):
         return Engine(model, params, DENSE, batch_size=slots,
-                      max_seq=max_seq, page_size=16, prefill_chunk=8)
+                      max_seq=max_seq, page_size=16, prefill_chunk=8,
+                      mesh=mesh)
+
+    makers = [("batch_to_completion", batch_engine),
+              ("continuous_paged", cont_engine)]
+    if sharded:
+        # honour an explicit --devices N even when MORE devices are visible
+        # (the mesh takes the first N); default to everything
+        n_dev = min(devices, jax.device_count()) if devices \
+            else jax.device_count()
+        if n_dev < 2:
+            print("[serve_bench] --sharded skipped: 1 device visible "
+                  "(use --devices N to force host devices)")
+        else:
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh((1, n_dev), ("data", "model"))
+            makers.append((f"continuous_paged_tp{n_dev}",
+                           lambda: cont_engine(mesh=mesh)))
 
     results = {}
-    for tag, mk in (("batch_to_completion", batch_engine),
-                    ("continuous_paged", cont_engine)):
+    token_streams = {}
+    for tag, mk in makers:
         eng = mk()
         # warmup on the engine instance itself: jitted prefill/decode are
         # per-instance, so a throwaway engine would put compilation back
@@ -80,8 +107,17 @@ def bench(slots: int, n_requests: int, max_seq: int, smoke: bool):
         assert all(r.done and len(r.out_tokens) == r.max_new_tokens
                    for r in reqs), f"{tag}: incomplete requests"
         results[tag] = toks / dt
+        token_streams[tag] = [r.out_tokens for r in reqs]
         emit(f"serve.{tag}.us_per_tok", dt / max(toks, 1) * 1e6,
              f"tok/s={toks / dt:.1f} toks={toks}")
+
+    for tag in results:
+        if tag.startswith("continuous_paged_tp"):
+            assert token_streams[tag] == token_streams["continuous_paged"], \
+                f"{tag}: sharded tokens diverge from single-device engine"
+            print(f"{tag}: tokens identical to single-device continuous "
+                  f"engine ({results[tag]:.1f} vs "
+                  f"{results['continuous_paged']:.1f} tok/s)")
 
     ratio = results["continuous_paged"] / results["batch_to_completion"]
     print(f"\ncontinuous vs batch-to-completion: {ratio:.2f}x tokens/s "
@@ -99,11 +135,33 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="CPU smoke config + 1.3x assertion (CI)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="add a tensor-parallel engine row over all "
+                         "visible devices (token-checked vs single-device)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="re-exec with N forced host devices "
+                         "(XLA host-platform override, for --sharded on CPU)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=64)
     args = ap.parse_args()
-    bench(args.slots, args.requests, args.max_seq, args.smoke)
+    if args.devices and jax.device_count() < args.devices:
+        # one-shot sentinel: the host-platform override only adds devices on
+        # the CPU backend, so on a GPU/TPU host the re-exec'd process would
+        # still be short and exec forever without it
+        if os.environ.get("_SERVE_BENCH_REEXEC"):
+            raise SystemExit(
+                f"--devices {args.devices}: still only {jax.device_count()} "
+                "device(s) after the host-platform override (non-CPU "
+                "backend?); run on CPU or drop --devices")
+        flags = os.environ.get("XLA_FLAGS", "")
+        env = dict(os.environ)
+        env["_SERVE_BENCH_REEXEC"] = "1"
+        env["XLA_FLAGS"] = (f"{flags} --xla_force_host_platform_device_count="
+                            f"{args.devices}").strip()
+        os.execve(sys.executable, [sys.executable] + sys.argv, env)
+    bench(args.slots, args.requests, args.max_seq, args.smoke, args.sharded,
+          args.devices)
 
 
 if __name__ == "__main__":

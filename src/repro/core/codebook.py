@@ -98,9 +98,13 @@ def kmeans_codebook(acts: jax.Array, k: int, spec: CodebookSpec,
     n = flat.shape[0]
     if key is None:
         key = jax.random.PRNGKey(0)
+    # Split ONCE up front: the subsample permutation and the per-subspace
+    # k-means inits must consume distinct keys (re-splitting the key that
+    # already produced the permutation would correlate the two streams).
+    key_sel, key_init = jax.random.split(key)
     if n > max_samples:
-        sel = jax.random.permutation(key, n)[:max_samples]
+        sel = jax.random.permutation(key_sel, n)[:max_samples]
         flat = flat[sel]
-    keys = jax.random.split(key, nc)
+    keys = jax.random.split(key_init, nc)
     return jax.vmap(lambda xs, kk: kmeans(xs, spec.c, spec.metric, iters, kk),
                     in_axes=(1, 0))(flat, keys)               # (nc, c, v)

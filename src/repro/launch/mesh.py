@@ -48,3 +48,25 @@ def data_axes(mesh) -> tuple:
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for unit tests (requires XLA host-device override)."""
     return _make_mesh(shape, axes)
+
+
+def replica_submeshes(mesh):
+    """Carve a ``(..., model)`` mesh into one TP submesh per data index.
+
+    Every non-``model`` axis is flattened into replica groups: a
+    ``(2, 16, 16)`` (pod, data, model) mesh yields 32 submeshes of shape
+    ``(1, 16)`` with axes ``("data", "model")``. This is the data-parallel
+    serving decomposition — each replica group runs its own
+    tensor-parallel engine (``repro.serve.router.ReplicaRouter``), so no
+    collective ever crosses replica boundaries.
+    """
+    import numpy as np
+    if "model" not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no 'model' axis")
+    if mesh.axis_names[-1] != "model":
+        raise ValueError("the 'model' axis must be trailing (fastest-"
+                         f"varying), got {mesh.axis_names}")
+    msize = mesh.shape["model"]
+    groups = np.asarray(mesh.devices).reshape(-1, msize)
+    return [jax.sharding.Mesh(row.reshape(1, msize), ("data", "model"))
+            for row in groups]

@@ -606,7 +606,7 @@ class Model:
 
     def prefill_paged(self, params: Params, tokens: jax.Array, kv: Params,
                       page_table: jax.Array, slot, pos, valid_len,
-                      qc: QuantConfig = DENSE):
+                      qc: QuantConfig = DENSE, act_sharding=None):
         """One RIGHT-padded prefill chunk for a single slot.
 
         Args:
@@ -617,6 +617,11 @@ class Model:
             Pages covering positions [0, pos+valid_len) of ``slot`` must
             already be allocated.
           slot: scalar slot index; pos: scalar absolute start position.
+          act_sharding: optional sharding (``NamedSharding``) pinned onto
+            the embedded activations — the sharded serving engine passes a
+            replicated spec so GSPMD keeps activations whole and partitions
+            the projections (column-parallel LUT lookups shard N, row-
+            parallel ones shard subspaces and all-reduce partial sums).
 
         Returns (logits (1, V) at the last real token, updated kv).
         Padded positions scatter to the trash page; the SSM path makes
@@ -630,6 +635,8 @@ class Model:
             raise NotImplementedError(
                 "paged serving covers token-prompt families only")
         x = params["embed"][tokens]
+        if act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, act_sharding)
         c = tokens.shape[1]
         if cfg.family in ATTN_FAMILIES:
             trash = kv["k"].shape[1] - 1
@@ -705,7 +712,7 @@ class Model:
 
     def decode_paged(self, params: Params, tokens: jax.Array, kv: Params,
                      page_table: jax.Array, positions: jax.Array,
-                     qc: QuantConfig = DENSE):
+                     qc: QuantConfig = DENSE, act_sharding=None):
         """One decode step over ALL slots at per-slot positions.
 
         Args:
@@ -717,6 +724,8 @@ class Model:
             position positions[b] and attends cache rows < positions[b]
             (none, for -1).
           page_table: (num_slots, pages_per_slot) int32, -1 = unallocated.
+          act_sharding: optional sharding constraint for the embedded
+            activations (see :meth:`prefill_paged`).
 
         Returns (logits (num_slots, V), updated kv). The new-token KV slab
         is scattered at each decoding slot's own (page, offset); lanes
@@ -734,6 +743,8 @@ class Model:
                 "paged serving covers token-prompt families only")
         b = tokens.shape[0]
         x = params["embed"][tokens]
+        if act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, act_sharding)
         live = positions >= 0                 # decoding lanes only
         pos_c = jnp.maximum(positions, 0)
         if cfg.family in ATTN_FAMILIES:

@@ -1,3 +1,3 @@
 """Distribution: sharding rules (DP/TP/EP/SP), pipeline parallelism."""
-from .sharding import (batch_pspecs, cache_pspecs, param_pspecs,
-                       logical_to_sharding)
+from .sharding import (batch_pspecs, cache_pspecs, paged_cache_pspecs,
+                       param_pspecs, logical_to_sharding)

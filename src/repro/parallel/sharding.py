@@ -165,16 +165,7 @@ def cache_pspecs(cfg: ModelConfig, batch_size: int, mesh: Mesh,
     da = data_axes if len(data_axes) > 1 else data_axes[0]
     m = model_axis
     msize = mesh.shape[m]
-    kvh, hd = cfg.num_kv_heads, (cfg.head_dim or 0)
-    # model-axis placement inside the cache: prefer kv heads; fall back to
-    # head_dim (matches the column-parallel wk/wv output sharding); else
-    # replicate across model.
-    if kvh and kvh % msize == 0:
-        mh, md = m, None
-    elif hd and hd % msize == 0:
-        mh, md = None, m
-    else:
-        mh, md = None, None
+    mh, md = _kv_model_axes(cfg, m, msize)
 
     if batch_first:
         kv = P(None, da, None, mh, md)          # (L, B, T, KVH, D)
@@ -196,6 +187,53 @@ def cache_pspecs(cfg: ModelConfig, batch_size: int, mesh: Mesh,
         return {"layers": mamba, "pos": pos}
     return {"layers": {"mamba": mamba, "attn": {"k": kv, "v": kv}},
             "pos": pos}
+
+
+def _kv_model_axes(cfg: ModelConfig, model_axis: str, msize: int):
+    """Model-axis placement inside a KV cache: prefer kv heads, fall back
+    to head_dim (matches the column-parallel wk/wv output sharding), else
+    replicate across model."""
+    kvh, hd = cfg.num_kv_heads, (cfg.head_dim or 0)
+    if kvh and kvh % msize == 0:
+        return model_axis, None
+    if hd and hd % msize == 0:
+        return None, model_axis
+    return None, None
+
+
+def paged_cache_pspecs(cfg: ModelConfig, mesh: Mesh,
+                       model_axis: str = "model"):
+    """PartitionSpecs for the PAGED serving cache (Model.init_paged_cache).
+
+    Layout (see docs/serving.md): attention families store KV as a physical
+    page pool ``(L, num_pages+1, page_size, KVH, HD)``. The pool — pages,
+    trash page included — is REPLICATED over the data axes: data-parallel
+    serving is replica-level (one engine + page table per replica group,
+    ``repro.serve.router``), so within one engine only tensor parallelism
+    applies, on the kv-head / head-dim axis exactly like the dense cache.
+    SSM / hybrid slot-indexed state shards its channel / head dims over
+    ``model`` (falling back to replicated on non-divisible dims). The page
+    table, positions and tokens are host-managed and replicated.
+    """
+    m = model_axis
+    msize = mesh.shape[m]
+    mh, md = _kv_model_axes(cfg, m, msize)
+    kv = P(None, None, None, mh, md)        # (L, P+1, page, KVH, HD)
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return {"k": kv, "v": kv}
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    mamba = {
+        # (L, slots, K-1, C): channels over model, like the dense cache
+        "conv": P(None, None, None,
+                  m if conv_dim % msize == 0 else None),
+        # (L, slots, H, HP, N): ssm heads over model
+        "h": P(None, None,
+               m if cfg.ssm_nheads % msize == 0 else None, None, None),
+    }
+    if cfg.family == "ssm":
+        return mamba
+    # hybrid: slot-dense shared-attn cache (n_inv, slots, T+1, KVH, HD)
+    return {"mamba": mamba, "attn": {"k": kv, "v": kv}}
 
 
 def logical_to_sharding(specs, mesh: Mesh):

@@ -1,22 +1,27 @@
 """Serving: continuous-batching engine over a paged LUT-aware KV cache.
 
 Public surface:
-  * :class:`Engine` — slot-scheduled continuous batching (the default).
+  * :class:`Engine` — slot-scheduled continuous batching (the default);
+    pass ``mesh=`` for tensor-parallel serving over a device mesh.
+  * :class:`ReplicaRouter` — data-parallel dispatch across engine
+    replicas (``from_mesh`` carves a (data, model) mesh into TP groups).
   * :class:`BatchToCompletionEngine` — legacy fixed-batch baseline.
   * :class:`Request` — one generation request.
   * :class:`PagedKVCache` / :class:`PageAllocator` /
     :class:`PagePoolExhausted` — the paged cache memory system.
   * :class:`SlotScheduler` — admission / eviction / preemption policy.
 
-See docs/serving.md for the engine lifecycle and cache layout.
+See docs/serving.md for the engine lifecycle, cache layout and the
+sharded-serving mesh recipes.
 """
 from .engine import BatchToCompletionEngine, Engine, greedy_generate
 from .kv_cache import (PageAllocator, PagePoolExhausted, PagedKVCache,
                        PageTable)
+from .router import ReplicaRouter
 from .scheduler import Request, Slot, SlotPhase, SlotScheduler
 
 __all__ = [
     "BatchToCompletionEngine", "Engine", "greedy_generate",
     "PageAllocator", "PagePoolExhausted", "PagedKVCache", "PageTable",
-    "Request", "Slot", "SlotPhase", "SlotScheduler",
+    "ReplicaRouter", "Request", "Slot", "SlotPhase", "SlotScheduler",
 ]

@@ -11,7 +11,11 @@
     per-slot page tables (``PagedKVCache``), so cache memory scales with
     live tokens rather than ``batch_size × max_seq``;
   * per-slot decode positions: one jitted ``decode_paged`` step advances
-    every active slot at its own sequence length.
+    every active slot at its own sequence length;
+  * optional tensor parallelism: ``Engine(mesh=...)`` shards params and
+    the paged KV pool over the mesh's ``model`` axis and compiles the
+    paged steps with explicit in/out shardings (data parallelism is
+    replica-level — :class:`repro.serve.router.ReplicaRouter`).
 
 :class:`BatchToCompletionEngine` — the legacy fixed-batch engine, kept as
 the measurable baseline for ``benchmarks/serve_bench.py``: requests are
@@ -38,6 +42,7 @@ path) instead of dense GEMMs — precomputed tables must already be in
 """
 from __future__ import annotations
 
+import contextlib
 from typing import List, Optional, Sequence
 
 import jax
@@ -97,13 +102,24 @@ class Engine:
         pages_per_slot`` (no oversubscription). Smaller pools admit fewer
         concurrent tokens and may trigger preemption.
       prefill_chunk: static prefill chunk width (must divide max_seq).
+      mesh: optional ``jax.sharding.Mesh`` (``launch.mesh``) with a
+        ``model`` axis. When given, the engine serves TENSOR-PARALLEL over
+        the mesh: params are placed by ``parallel.sharding.param_pspecs``
+        (codebooks replicated for column-parallel projections,
+        subspace-sharded for row-parallel ones), the paged KV pool by
+        ``paged_cache_pspecs`` (pages replicated over ``data``,
+        kv-heads / head-dim over ``model``), and the jitted
+        prefill/decode steps carry explicit in/out shardings so GSPMD
+        inserts the row-parallel all-reduce after each subspace-sharded
+        LUT accumulate. Data parallelism is replica-level — see
+        :class:`repro.serve.router.ReplicaRouter`.
     """
 
     def __init__(self, model, params, qc: QuantConfig = DENSE,
                  batch_size: int = 8, max_seq: int = 512,
                  eos_id: Optional[int] = None, seed: int = 0,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefill_chunk: int = 32):
+                 prefill_chunk: int = 32, mesh=None):
         self.model = model
         self.params = params
         self.qc = qc
@@ -122,14 +138,69 @@ class Engine:
         self.scheduler = SlotScheduler(self.num_slots)
         self.step_count = 0
 
+        # Per-slot temperatures live in a DEVICE-RESIDENT (num_slots,)
+        # buffer refreshed only when slot occupancy changes (admission /
+        # eviction / preemption) — never per decode step. ``temps_uploads``
+        # counts the host->device transfers for the regression test.
+        self._temps_h = np.zeros((self.num_slots,), np.float32)
+        self._temps_dev: Optional[jax.Array] = None
+        self.temps_uploads = 0
+
+        self.mesh = mesh
+        self._table_sharding = None
+        if mesh is None:
+            self._jit_prefill = jax.jit(
+                lambda p, t, kv, pt, slot, pos, valid: model.prefill_paged(
+                    p, t, kv, pt, slot, pos, valid, qc),
+                donate_argnums=(2,))
+            self._jit_decode = jax.jit(
+                lambda p, t, kv, pt, positions: model.decode_paged(
+                    p, t, kv, pt, positions, qc),
+                donate_argnums=(2,))
+        else:
+            self._init_sharded(mesh)
+
+    def _init_sharded(self, mesh) -> None:
+        """Place params + paged cache on ``mesh`` and compile the paged
+        entry points with explicit in/out shardings (tensor parallelism
+        over the ``model`` axis; see docs/serving.md §Sharded serving)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.parallel.sharding import (logical_to_sharding,
+                                             paged_cache_pspecs,
+                                             param_pspecs)
+        model, qc, cfg = self.model, self.qc, self.model.cfg
+        msize = mesh.shape["model"]
+        pshard = logical_to_sharding(
+            param_pspecs(self.params, cfg, model_axis_size=msize), mesh)
+        self.params = jax.device_put(self.params, pshard)
+        cshard = logical_to_sharding(paged_cache_pspecs(cfg, mesh), mesh)
+        self.kv.data = jax.device_put(self.kv.data, cshard)
+        repl = NamedSharding(mesh, P())
+        self._table_sharding = repl
+        # NOTE: jax.jit is lazy — tracing happens at the first CALL, which
+        # the step methods wrap in _mesh_scope() (the ambient mesh the
+        # in-model with_sharding_constraint hooks need); scoping the jit
+        # construction here would be inert.
         self._jit_prefill = jax.jit(
             lambda p, t, kv, pt, slot, pos, valid: model.prefill_paged(
-                p, t, kv, pt, slot, pos, valid, qc),
+                p, t, kv, pt, slot, pos, valid, qc, act_sharding=repl),
+            in_shardings=(pshard, repl, cshard, repl, repl, repl, repl),
+            out_shardings=(repl, cshard),
             donate_argnums=(2,))
         self._jit_decode = jax.jit(
             lambda p, t, kv, pt, positions: model.decode_paged(
-                p, t, kv, pt, positions, qc),
+                p, t, kv, pt, positions, qc, act_sharding=repl),
+            in_shardings=(pshard, repl, cshard, repl, repl),
+            out_shardings=(repl, cshard),
             donate_argnums=(2,))
+
+    def _mesh_scope(self):
+        """Ambient-mesh context for tracing/compiling the jitted steps
+        (lets in-model ``with_sharding_constraint`` hooks see the mesh)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.launch.mesh import mesh_context
+        return mesh_context(self.mesh)
 
     # ------------------------------------------------------------------
     # sampling
@@ -139,6 +210,41 @@ class Engine:
         """One token per row via :func:`_sample_tokens` (per-slot keys)."""
         self.key, toks = _sample_tokens(self.key, logits, temps, slot_ids)
         return toks
+
+    # ------------------------------------------------------------------
+    # per-slot temperature buffer (device-resident)
+    # ------------------------------------------------------------------
+    def _set_slot_temp(self, slot_idx: int, temp: float) -> None:
+        """Update one lane's temperature; invalidates the device buffer
+        only when the value actually changes."""
+        if self._temps_h[slot_idx] != temp:
+            self._temps_h[slot_idx] = temp
+            self._temps_dev = None
+
+    def _decode_temps(self) -> Optional[jax.Array]:
+        """(num_slots,) device temps, or None when every lane is greedy.
+
+        The device buffer is cached between decode steps and re-uploaded
+        only after an occupancy change touched a temperature — the per-step
+        host->device churn the batch engine never had is not re-introduced
+        here (regression: test_serve_paged.py::
+        test_no_per_step_temperature_upload)."""
+        if not (self._temps_h > 0.0).any():
+            return None
+        if self._temps_dev is None:
+            if self._table_sharding is not None:
+                self._temps_dev = jax.device_put(self._temps_h,
+                                                 self._table_sharding)
+            else:
+                self._temps_dev = jnp.asarray(self._temps_h)
+            self.temps_uploads += 1
+        return self._temps_dev
+
+    @property
+    def load(self) -> int:
+        """Requests queued or occupying a slot (router dispatch metric)."""
+        return len(self.scheduler.waiting) + sum(
+            not s.free for s in self.scheduler.slots)
 
     # ------------------------------------------------------------------
     # public API
@@ -175,7 +281,8 @@ class Engine:
         stall any prompt can cause to ``prefill_chunk`` tokens of work.
         Returns False when there was nothing to do.
         """
-        self.scheduler.admit(self.kv)
+        for slot in self.scheduler.admit(self.kv):
+            self._set_slot_temp(slot.idx, slot.req.temperature)
         progressed = False
         slot = self.scheduler.next_prefill()
         if slot is not None:
@@ -190,6 +297,11 @@ class Engine:
     # ------------------------------------------------------------------
     # internals
     # ------------------------------------------------------------------
+    def _evict(self, slot) -> None:
+        """Evict + clear the lane's temperature (device buffer refresh)."""
+        self.scheduler.evict(slot, self.kv)
+        self._set_slot_temp(slot.idx, 0.0)
+
     def _ensure_pages(self, slot_idx: int, n_tokens: int) -> None:
         """Grow a slot to n_tokens, preempting other slots if needed."""
         while True:
@@ -201,6 +313,7 @@ class Engine:
                     self.kv, exclude=slot_idx)
                 if victim is None:
                     raise
+                self._set_slot_temp(victim.idx, 0.0)
 
     def _prefill_chunk_step(self, slot) -> None:
         c = self.prefill_chunk
@@ -210,10 +323,11 @@ class Engine:
         # only decode grows a slot page-by-page
         toks = np.zeros((1, c), np.int32)
         toks[0, :valid] = chunk
-        logits, self.kv.data = self._jit_prefill(
-            self.params, jnp.asarray(toks), self.kv.data,
-            self.kv.table_device(), _i32(slot.idx), _i32(slot.pos),
-            _i32(valid))
+        with self._mesh_scope():
+            logits, self.kv.data = self._jit_prefill(
+                self.params, jnp.asarray(toks), self.kv.data,
+                self.kv.table_device(self._table_sharding), _i32(slot.idx),
+                _i32(slot.pos), _i32(valid))
         slot.pos += valid
         if slot.pos < slot.prefill_len:
             return
@@ -240,7 +354,7 @@ class Engine:
                 # cache write.
                 s.req.done = True
                 s.req.finish_step = self.step_count
-                self.scheduler.evict(s, self.kv)
+                self._evict(s)
         dslots = self.scheduler.decode_slots()  # preemption may have culled
         if not dslots:
             return
@@ -250,15 +364,17 @@ class Engine:
         # slots mid-prefill): decode_paged redirects their KV writes to
         # the trash page/row instead of through their page tables.
         positions = np.full((b,), -1, np.int32)
-        temps_h = np.zeros((b,), np.float32)
         for s in dslots:
             toks[s.idx, 0] = s.next_token
             positions[s.idx] = s.pos
-            temps_h[s.idx] = s.req.temperature
-        temps = jnp.asarray(temps_h) if (temps_h > 0.0).any() else None
-        logits, self.kv.data = self._jit_decode(
-            self.params, jnp.asarray(toks), self.kv.data,
-            self.kv.table_device(), jnp.asarray(positions))
+        # device-resident per-slot temps: refreshed on admission/eviction,
+        # NOT rebuilt and re-uploaded every decode step
+        temps = self._decode_temps()
+        with self._mesh_scope():
+            logits, self.kv.data = self._jit_decode(
+                self.params, jnp.asarray(toks), self.kv.data,
+                self.kv.table_device(self._table_sharding),
+                jnp.asarray(positions))
         nxt = np.asarray(self._sample(logits, temps, range(b)))
         for s in dslots:
             s.pos += 1
@@ -277,7 +393,7 @@ class Engine:
         if hit_eos or budget_done or truncated:
             req.done = True
             req.finish_step = self.step_count
-            self.scheduler.evict(slot, self.kv)
+            self._evict(slot)
 
 
 class BatchToCompletionEngine:
@@ -314,6 +430,10 @@ class BatchToCompletionEngine:
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
+        # monotone step clock across batches: one tick per prefill and per
+        # decode step, so Request.first_token_step / finish_step are
+        # comparable with the continuous engine's step_count timestamps.
+        self.step_count = 0
 
         self._prefill = jax.jit(
             lambda p, b, c, pl: model.prefill(p, b, c, qc, pad_lens=pl))
@@ -355,6 +475,7 @@ class BatchToCompletionEngine:
         cache = self.model.init_cache(pad_b, self.max_seq)
         logits, cache = self._prefill(
             self.params, {"tokens": jnp.asarray(toks)}, cache, pad_lens)
+        self.step_count += 1
 
         active = np.ones(pad_b, bool)
         active[b:] = False
@@ -370,9 +491,12 @@ class BatchToCompletionEngine:
                 if active[j] and not r.done:
                     t = int(np_tok[j])
                     r.out_tokens.append(t)
+                    if r.first_token_step is None:
+                        r.first_token_step = self.step_count
                     if (self.eos_id is not None and t == self.eos_id) or \
                             len(r.out_tokens) >= r.max_new_tokens:
                         r.done = True
+                        r.finish_step = self.step_count
                         active[j] = False
             if not active[:b].any():
                 break
@@ -381,9 +505,12 @@ class BatchToCompletionEngine:
                 #                   clamped writes silently corrupt row T-1
             logits, cache = self._decode(
                 self.params, jnp.asarray(np_tok)[:, None], cache, pad_lens)
+            self.step_count += 1
             next_tok = self._sample(logits, temps)
         for r in reqs:
             r.done = True
+            if r.finish_step is None:       # truncated at max_seq: stamp
+                r.finish_step = self.step_count
 
 
 def greedy_generate(model, params, prompt_tokens, n_new: int,

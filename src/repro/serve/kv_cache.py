@@ -26,6 +26,7 @@ from __future__ import annotations
 import math
 from typing import Any, Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -162,10 +163,15 @@ class PageTable:
             self._dev = None
 
     # -- device view --------------------------------------------------------
-    def device(self) -> jnp.ndarray:
-        """(num_slots, pages_per_slot) int32 device copy (cached)."""
+    def device(self, sharding=None) -> jnp.ndarray:
+        """(num_slots, pages_per_slot) int32 device copy (cached).
+
+        ``sharding``: optional placement for the copy — the sharded serving
+        engine passes a replicated ``NamedSharding`` so the table lands on
+        every mesh device without a resharding step inside jit."""
         if self._dev is None:
-            self._dev = jnp.asarray(self.table)
+            self._dev = (jnp.asarray(self.table) if sharding is None
+                         else jax.device_put(self.table, sharding))
         return self._dev
 
     @property
@@ -229,8 +235,8 @@ class PagedKVCache:
         if self.paged:
             self.table.release(slot)
 
-    def table_device(self) -> jnp.ndarray:
-        return self.table.device()
+    def table_device(self, sharding=None) -> jnp.ndarray:
+        return self.table.device(sharding)
 
     @property
     def live_pages(self) -> int:

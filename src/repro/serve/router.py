@@ -1,0 +1,130 @@
+"""Data-parallel replica routing over continuous-batching engines.
+
+Tensor parallelism lives INSIDE one :class:`~repro.serve.engine.Engine`
+(params + paged KV pool sharded over a mesh's ``model`` axis; see
+``Engine(mesh=...)``). Data parallelism is replica-level: each replica
+group owns a full engine — its own :class:`SlotScheduler`, page pool and
+jitted prefill/decode steps — and the :class:`ReplicaRouter` dispatches
+each incoming request to the least-loaded replica, FIFO within a replica.
+
+Replica-level DP (rather than widening one engine's batch over a ``data``
+axis) keeps the scheduler's host-side state machine per-replica: admission,
+eviction and preemption decisions never need a cross-replica barrier, and a
+replica that is busy compiling or preempting cannot stall its neighbours.
+This mirrors how LUT-based accelerator deployments scale out — more
+identical lookup units, not wider ones.
+
+Known limitation: :meth:`ReplicaRouter.step` steps replicas sequentially,
+and each engine step ends in a blocking device→host sample sync, so on a
+single host driver the replicas do not overlap in wall-clock — the router
+adds capacity and isolation, not single-driver throughput. Overlapping
+them (dispatch every replica's jitted step before syncing any samples, or
+one driver thread per replica) is future work.
+
+``ReplicaRouter.from_mesh`` carves a ``(data, model)`` mesh into one
+tensor-parallel submesh per index along the leading data axis, so
+``2 × 2 = 4`` devices serve as 2 replicas × TP-2 from a single entry
+point::
+
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    router = ReplicaRouter.from_mesh(model, params, qc, mesh=mesh,
+                                     batch_size=4, max_seq=512)
+    router.run(requests)
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.core.lut import DENSE, QuantConfig
+
+from .engine import Engine
+from .scheduler import Request
+
+
+class ReplicaRouter:
+    """FIFO dispatch of requests to the least-loaded engine replica.
+
+    All replicas must be configured identically (same ``max_seq``, page
+    pool, ...): admissibility is checked against whichever replica a
+    request is dispatched to, so an oversized request raises
+    :class:`~repro.serve.kv_cache.PagePoolExhausted` at :meth:`submit`
+    regardless of the replica it would have landed on, exactly like a
+    single engine.
+    """
+
+    def __init__(self, engines: Sequence[Engine]):
+        if not engines:
+            raise ValueError("ReplicaRouter needs at least one engine")
+        self.engines: List[Engine] = list(engines)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, model, params, qc: QuantConfig = DENSE, *,
+              replicas: int, mesh=None, **engine_kw) -> "ReplicaRouter":
+        """``replicas`` identical engines; each gets ``mesh`` (usually a
+        per-replica TP submesh is wanted instead — see :meth:`from_mesh`;
+        passing one shared mesh here replicates serving work, it does not
+        split it)."""
+        return cls([Engine(model, params, qc, mesh=mesh, **engine_kw)
+                    for _ in range(replicas)])
+
+    @classmethod
+    def from_mesh(cls, model, params, qc: QuantConfig = DENSE, *, mesh,
+                  **engine_kw) -> "ReplicaRouter":
+        """One tensor-parallel engine per data-slice of ``mesh``.
+
+        ``mesh`` must carry a trailing ``model`` axis; every other (data)
+        axis is flattened into replica groups
+        (``launch.mesh.replica_submeshes``). A ``(2, 16, 16)`` pod mesh
+        therefore yields 32 replicas of TP-16; params are placed per
+        replica (each group holds its own copy — that IS data
+        parallelism's memory cost).
+        """
+        from repro.launch.mesh import replica_submeshes
+        return cls([Engine(model, params, qc, mesh=sub, **engine_kw)
+                    for sub in replica_submeshes(mesh)])
+
+    # ------------------------------------------------------------------
+    # dispatch
+    # ------------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return any(e.scheduler.has_work for e in self.engines)
+
+    @property
+    def load(self) -> int:
+        return sum(e.load for e in self.engines)
+
+    def _least_loaded(self) -> Engine:
+        return min(self.engines, key=lambda e: e.load)
+
+    def submit(self, req: Request) -> Engine:
+        """Dispatch ``req`` to the least-loaded replica (ties: lowest
+        index). Returns the engine it landed on. Raises
+        :class:`PagePoolExhausted` for never-servable requests, exactly
+        like ``Engine.submit``."""
+        eng = self._least_loaded()
+        eng.submit(req)
+        return eng
+
+    def step(self) -> bool:
+        """One engine iteration on every replica with work."""
+        progressed = False
+        for e in self.engines:
+            if e.scheduler.has_work:
+                progressed = e.step() or progressed
+        return progressed
+
+    def run_until_idle(self) -> None:
+        while self.has_work:
+            if not self.step():
+                raise RuntimeError("router made no progress")  # unreachable
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve all requests to completion across the replicas."""
+        for r in requests:
+            self.submit(r)
+        self.run_until_idle()
+        return requests

@@ -5,6 +5,7 @@ import pytest
 from conftest import run_in_devices
 
 
+@pytest.mark.slow
 def test_sharded_train_step_all_families():
     out = run_in_devices("""
 import jax, jax.numpy as jnp
@@ -42,6 +43,7 @@ for name in ["qwen1.5-4b", "dbrx-132b", "mamba2-2.7b", "zamba2-1.2b"]:
     assert out.count("OK") == 4
 
 
+@pytest.mark.slow
 def test_sharded_serve_batched_and_sp():
     out = run_in_devices("""
 import jax, jax.numpy as jnp

@@ -54,6 +54,25 @@ def test_kmeans_reduces_distortion(rng):
     assert distortion(z10) <= distortion(z0) + 1e-6
 
 
+def test_kmeans_codebook_subsample_key_hygiene():
+    """The calibration-subsample permutation and the per-subspace k-means
+    inits must consume DISTINCT subkeys (regression: the permutation key
+    was re-split for the inits — classic JAX key reuse). Observable
+    contract: deterministic per key, different across keys, and the
+    subsample path (n > max_samples) produces finite centroids."""
+    spec = CodebookSpec(v=4, c=8)
+    acts = jax.random.normal(jax.random.PRNGKey(3), (600, 16))
+    a = kmeans_codebook(acts, 16, spec, iters=2, key=jax.random.PRNGKey(0),
+                        max_samples=128)
+    a2 = kmeans_codebook(acts, 16, spec, iters=2, key=jax.random.PRNGKey(0),
+                         max_samples=128)
+    b = kmeans_codebook(acts, 16, spec, iters=2, key=jax.random.PRNGKey(1),
+                        max_samples=128)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a2))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+    assert np.isfinite(np.asarray(a)).all() and a.shape == (4, 8, 4)
+
+
 @pytest.mark.parametrize("metric", ["l2", "l1", "chebyshev"])
 def test_lut_linear_modes_consistent(metric, rng):
     qc_t = QuantConfig(mode="lut_train", v=4, c=16, metric=metric)

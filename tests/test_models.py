@@ -24,7 +24,14 @@ def make_batch(cfg, B=2, S=16):
     return {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
 
 
-@pytest.mark.parametrize("name", ARCH_NAMES)
+# the heaviest smoke configs (deep grouped scans) run in the slow CI job;
+# the default run keeps one representative per family fast
+_SLOW_SMOKE = {"gemma3-4b", "gemma3-27b", "zamba2-1.2b", "dbrx-132b"}
+
+
+@pytest.mark.parametrize(
+    "name", [pytest.param(n, marks=pytest.mark.slow) if n in _SLOW_SMOKE
+             else n for n in ARCH_NAMES])
 def test_smoke_forward_and_train_step(name):
     cfg = SMOKE_REGISTRY[name]()
     m = Model(cfg)
@@ -113,7 +120,10 @@ def test_decode_matches_forward(name):
                                    rtol=5e-3, atol=5e-3)
 
 
-@pytest.mark.parametrize("name", ["qwen1.5-4b", "dbrx-132b", "mamba2-2.7b"])
+@pytest.mark.parametrize(
+    "name", ["qwen1.5-4b",
+             pytest.param("dbrx-132b", marks=pytest.mark.slow),
+             "mamba2-2.7b"])
 def test_lut_mode_train_and_infer(name):
     cfg = SMOKE_REGISTRY[name]().replace(attn_impl="naive")
     m = Model(cfg)

@@ -122,6 +122,7 @@ def test_block_local_equals_naive_window(s, w):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_grouped_scan_equals_flat_scan():
     """gemma3-style grouped forward == the same model's flat forward."""
     cfg = get_smoke_config("gemma3-27b").replace(

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import precompute_model
@@ -15,6 +16,7 @@ from repro.train import TrainConfig, Trainer
 KEY = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 def test_engine_greedy_matches_manual_decode():
     cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
     m = Model(cfg)
@@ -50,6 +52,7 @@ def test_engine_batching_isolates_requests():
     assert r_alone.out_tokens == r_batched.out_tokens
 
 
+@pytest.mark.slow
 def test_engine_per_request_temperature():
     """A greedy (T=0) request must stay deterministic even when batched
     behind a stochastic one (the engine used to apply reqs[0].temperature
@@ -70,6 +73,7 @@ def test_engine_per_request_temperature():
     assert hot.out_tokens != hot_greedy.out_tokens
 
 
+@pytest.mark.slow
 def test_end_to_end_lutboost_pipeline():
     """The paper's full workflow: dense train → stage① convert → stage②/③
     fine-tune → precompute LUTs → serve. Accuracy of the LUT model must

@@ -1,0 +1,175 @@
+"""Sharded serving parity (subprocess with 4 host devices): the
+tensor-parallel continuous engine and the DP replica router must be
+token-identical to the single-device engine — dense and lut_infer — and
+capacity errors / preemption must behave identically per replica."""
+import pytest
+
+from conftest import run_in_devices
+
+pytestmark = pytest.mark.slow
+
+
+def test_sharded_engine_parity_dense_and_lut():
+    """2×2 (data, model) mesh: paged prefill logits match the single-device
+    forward, and engine token streams match the single-device engine for
+    dense and lut_infer operating points."""
+    out = run_in_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.core import precompute_model
+from repro.core.lut import DENSE, QuantConfig
+from repro.launch.mesh import make_test_mesh
+from repro.models.model import Model
+from repro.serve import Engine, Request
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+m = Model(cfg)
+qc_t = QuantConfig(mode="lut_train", v=4, c=8)
+qc_i = QuantConfig(mode="lut_infer", v=4, c=8, impl="ref")
+dense_params = m.init(jax.random.PRNGKey(0), DENSE)
+lut_params = precompute_model(m.init(jax.random.PRNGKey(0), qc_t), qc_i)
+
+def mk_reqs():
+    return [Request(tokens=[i + 2, i + 3, i + 4], max_new_tokens=5 + i)
+            for i in range(3)]
+
+for tag, params, qc in [("dense", dense_params, DENSE),
+                        ("lut_infer", lut_params, qc_i)]:
+    ref, sh = mk_reqs(), mk_reqs()
+    kw = dict(batch_size=2, max_seq=32, page_size=8, prefill_chunk=4)
+    Engine(m, params, qc, **kw).run(ref)
+    eng = Engine(m, params, qc, mesh=mesh, **kw)
+    eng.run(sh)
+    assert [r.out_tokens for r in ref] == [r.out_tokens for r in sh], tag
+
+    # logits parity through the sharded compiled prefill step itself
+    toks = np.zeros((1, 4), np.int32); toks[0] = [3, 4, 5, 6]
+    full, _ = m.forward(params, {"tokens": jnp.asarray(toks)}, qc)
+    eng.kv.ensure(0, 4)
+    i32 = lambda v: jnp.asarray(v, jnp.int32)
+    lg, eng.kv.data = eng._jit_prefill(
+        eng.params, jnp.asarray(toks), eng.kv.data,
+        eng.kv.table_device(eng._table_sharding), i32(0), i32(0), i32(4))
+    np.testing.assert_allclose(np.asarray(lg)[0],
+                               np.asarray(full)[0, -1],
+                               rtol=5e-3, atol=5e-3)
+    print(tag, "OK")
+
+# hot sampling under TP: exercises the mesh-sharded temps device_put and
+# categorical sampling over mesh-committed logits (token parity with the
+# single-device engine is NOT asserted — all-reduce summation order may
+# legitimately flip a draw near a probability boundary)
+hot = [Request(tokens=[3, 4, 5], max_new_tokens=6, temperature=1.0),
+       Request(tokens=[6, 7, 8], max_new_tokens=6)]
+eng = Engine(m, dense_params, DENSE, mesh=mesh, batch_size=2, max_seq=32,
+             page_size=8, prefill_chunk=4)
+eng.run(hot)
+assert all(r.done and len(r.out_tokens) == 6 for r in hot)
+assert eng.temps_uploads >= 1          # the sharded temps path executed
+print("HOT-TP OK")
+""")
+    assert out.count("OK") == 3
+
+
+def test_sharded_engine_parity_ssm_and_hybrid():
+    """Slot-indexed recurrent state (mamba2) and the hybrid slot-dense
+    shared-attn cache shard over the model axis without changing tokens."""
+    out = run_in_devices("""
+import jax
+from repro.configs import get_smoke_config
+from repro.core.lut import DENSE
+from repro.launch.mesh import make_test_mesh
+from repro.models.model import Model
+from repro.serve import Engine, Request
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+for name in ["mamba2-2.7b", "zamba2-1.2b"]:
+    cfg = get_smoke_config(name).replace(attn_impl="naive")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0), DENSE)
+    mk = lambda: [Request(tokens=[3, 4, 5], max_new_tokens=6),
+                  Request(tokens=list(range(2, 12)), max_new_tokens=4)]
+    ref, sh = mk(), mk()
+    kw = dict(batch_size=2, max_seq=32, page_size=8, prefill_chunk=4)
+    Engine(m, params, DENSE, **kw).run(ref)
+    Engine(m, params, DENSE, mesh=mesh, **kw).run(sh)
+    assert [r.out_tokens for r in ref] == [r.out_tokens for r in sh], name
+    print(name, "OK")
+""")
+    assert out.count("OK") == 2
+
+
+def test_sharded_capacity_errors_and_preemption_parity():
+    """PagePoolExhausted and recompute-preemption must behave identically
+    on the sharded engine and on every router replica."""
+    out = run_in_devices("""
+import jax
+from repro.configs import get_smoke_config
+from repro.core.lut import DENSE
+from repro.launch.mesh import make_test_mesh
+from repro.models.model import Model
+from repro.serve import Engine, PagePoolExhausted, ReplicaRouter, Request
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0), DENSE)
+kw = dict(batch_size=2, max_seq=32, page_size=8, prefill_chunk=4)
+
+# oversized request refused at submit, sharded and routed alike
+eng = Engine(m, params, DENSE, mesh=mesh, **kw)
+try:
+    eng.submit(Request(tokens=list(range(40)), max_new_tokens=2))
+    raise SystemExit("sharded engine accepted an oversized request")
+except PagePoolExhausted:
+    print("EXHAUST-TP OK")
+router = ReplicaRouter.from_mesh(m, params, DENSE, mesh=mesh, **kw)
+try:
+    router.submit(Request(tokens=list(range(40)), max_new_tokens=2))
+    raise SystemExit("router accepted an oversized request")
+except PagePoolExhausted:
+    print("EXHAUST-DP OK")
+
+# oversubscribed pool (preemption path) under TP == single-device tokens
+mk = lambda: [Request(tokens=[3, 4, 5], max_new_tokens=20),
+              Request(tokens=[6, 7, 8], max_new_tokens=20)]
+ref, sh = mk(), mk()
+Engine(m, params, DENSE, num_pages=5, **kw).run(ref)
+Engine(m, params, DENSE, num_pages=5, mesh=mesh, **kw).run(sh)
+assert all(r.done and len(r.out_tokens) == 20 for r in sh)
+assert [r.out_tokens for r in ref] == [r.out_tokens for r in sh]
+print("PREEMPT-TP OK")
+""")
+    assert out.count("OK") == 3
+
+
+def test_replica_router_tp_dp_from_one_mesh():
+    """from_mesh carves (2, 2) into 2 replicas × TP-2; routed greedy
+    outputs match solo runs and both replicas receive work."""
+    out = run_in_devices("""
+import jax
+from repro.configs import get_smoke_config
+from repro.core.lut import DENSE
+from repro.launch.mesh import make_test_mesh
+from repro.models.model import Model
+from repro.serve import Engine, ReplicaRouter, Request
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0), DENSE)
+kw = dict(batch_size=1, max_seq=32, page_size=8, prefill_chunk=4)
+solo = [Request(tokens=[i + 2, i + 3], max_new_tokens=5) for i in range(4)]
+for r in solo:
+    Engine(m, params, DENSE, **kw).run([r])
+router = ReplicaRouter.from_mesh(m, params, DENSE, mesh=mesh, **kw)
+assert len(router.engines) == 2
+routed = [Request(tokens=[i + 2, i + 3], max_new_tokens=5) for i in range(4)]
+served = {id(router.submit(r)) for r in routed}
+assert len(served) == 2          # least-loaded dispatch used both replicas
+router.run_until_idle()
+assert all(a.out_tokens == b.out_tokens for a, b in zip(solo, routed))
+print("ROUTER OK")
+""")
+    assert "ROUTER OK" in out

@@ -138,6 +138,7 @@ def test_error_feedback_removes_bias():
 
 
 # ---------------------------------------------------------------- trainer
+@pytest.mark.slow
 def test_trainer_learns_checkpoints_and_resumes(tmp_path):
     cfg = get_smoke_config("qwen1.5-4b")
     m = Model(cfg)
@@ -157,6 +158,7 @@ def test_trainer_learns_checkpoints_and_resumes(tmp_path):
     assert len(hist2["loss"]) <= 12             # only the remaining steps
 
 
+@pytest.mark.slow
 def test_train_step_microbatch_equivalence():
     """Grad accumulation over microbatches == full-batch gradients.
 
