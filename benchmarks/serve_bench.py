@@ -18,6 +18,13 @@ single-device continuous run. On a CPU host pass ``--devices N`` to
 re-exec with N forced host devices (XLA host-platform override) — the row
 then measures dispatch overhead, not real TP speedup (host "devices" share
 the same cores; see docs/serving.md §Sharded serving).
+
+The prefix-reuse row replays a shared-system-prompt workload (one warming
+request, then N requests sharing its page-aligned prefix) through a cold
+engine (``prefix_cache=False``) and a warm one, asserts the two produce
+token-identical greedy output, and reports the prefill-token reduction
+(``--smoke`` asserts >= 30%; typical is ~2x that, since only the private
+user suffix of each warm request is prefilled).
 """
 from __future__ import annotations
 
@@ -63,6 +70,56 @@ def _run_timed(engine, reqs):
     return toks, dt
 
 
+def shared_prefix_workload(n_requests: int, system_len: int = 24,
+                           user_len: int = 4, n_new: int = 4):
+    """N requests sharing one deterministic system prompt + private suffix."""
+    system = [(5 * j) % 60 + 2 for j in range(system_len)]
+    return [Request(tokens=system + [(11 * i + j) % 60 + 2
+                                     for j in range(user_len)],
+                    max_new_tokens=n_new)
+            for i in range(n_requests)]
+
+
+def prefix_bench(mk_engine, n_requests: int, smoke: bool) -> float:
+    """Cold/warm A/B over the shared-system-prompt workload.
+
+    The first request is served to completion before the rest are
+    submitted (it warms the prefix index the way long-lived production
+    traffic would); the cold engine replays the identical arrival
+    sequence with ``prefix_cache=False``.
+    Returns the warm engine's prefill-token reduction in [0, 1).
+    """
+    streams, engines = {}, {}
+    for tag, warm in (("cold", False), ("warm", True)):
+        eng = mk_engine(prefix_cache=warm)
+        reqs = shared_prefix_workload(n_requests)
+        eng.run([reqs[0]])
+        for r in reqs[1:]:
+            eng.submit(r)
+        eng.run_until_idle()
+        assert all(r.done and len(r.out_tokens) == r.max_new_tokens
+                   for r in reqs), f"prefix {tag}: incomplete requests"
+        streams[tag] = [r.out_tokens for r in reqs]
+        engines[tag] = eng
+    assert streams["warm"] == streams["cold"], \
+        "prefix reuse changed greedy output vs the cold path"
+    warm = engines["warm"]
+    reduction = 1.0 - warm.prefilled_tokens / max(warm.prompt_tokens, 1)
+    emit("serve.prefix_reuse.prefill_reduction", reduction * 100.0,
+         f"prefilled {warm.prefilled_tokens}/{warm.prompt_tokens} prompt "
+         f"tokens, hit_rate={warm.prefix_hit_rate:.2f}, "
+         f"cow_forks={warm.kv.cow_forks}")
+    print(f"prefix reuse: tokens identical to cold path; prefill tokens "
+          f"reduced {reduction * 100:.0f}% "
+          f"({engines['cold'].prefilled_tokens} -> {warm.prefilled_tokens})")
+    if smoke:
+        assert reduction >= 0.30, (
+            f"shared-system-prompt workload must cut prefill tokens by "
+            f">=30%, got {reduction * 100:.0f}%")
+        print("prefix smoke check OK (>= 30% prefill reduction)")
+    return reduction
+
+
 def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
           sharded: bool = False, devices: int = 0):
     cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
@@ -73,10 +130,10 @@ def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
         return BatchToCompletionEngine(model, params, DENSE,
                                        batch_size=slots, max_seq=max_seq)
 
-    def cont_engine(mesh=None):
+    def cont_engine(mesh=None, prefix_cache=True):
         return Engine(model, params, DENSE, batch_size=slots,
                       max_seq=max_seq, page_size=16, prefill_chunk=8,
-                      mesh=mesh)
+                      mesh=mesh, prefix_cache=prefix_cache)
 
     makers = [("batch_to_completion", batch_engine),
               ("continuous_paged", cont_engine)]
@@ -128,6 +185,9 @@ def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
             f"continuous batching must beat batch-to-completion by >=1.3x "
             f"on the mixed-length smoke workload, got {ratio:.2f}x")
         print("smoke check OK (>= 1.3x)")
+
+    # shared-system-prompt row: cold/warm parity + prefill-token reduction
+    prefix_bench(cont_engine, n_requests, smoke)
     return ratio
 
 

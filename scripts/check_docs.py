@@ -1,16 +1,23 @@
-"""Docs CI: markdown link check + doctest of fenced ``>>>`` examples.
+"""Docs CI: markdown link/anchor check, orphan detection, fenced doctests.
 
 Usage:  PYTHONPATH=src python scripts/check_docs.py [files...]
 
 With no arguments, checks README.md and every ``docs/*.md``.
 
-Two passes per file:
+Passes per file:
   1. **Links** — every inline markdown link/image target is validated:
-     relative paths must exist on disk (anchors are stripped; pure
-     ``#anchor`` links must match a heading in the same file); http(s)
-     URLs are only sanity-checked for shape (no network in CI).
+     relative paths must exist on disk; pure ``#anchor`` links must match
+     a heading in the same file; ``file.md#anchor`` links must match a
+     heading in the *target* file (cross-file anchors); http(s) URLs are
+     only sanity-checked for shape (no network in CI).
   2. **Doctests** — every fenced ```python block containing ``>>>`` is
      run through :mod:`doctest`, so the examples in the docs cannot rot.
+
+One repo-wide pass (default full-set runs only, where the link graph is
+complete):
+  3. **Orphans** — every ``docs/*.md`` must be reachable: linked from
+     README.md or from another doc. An unreferenced doc is dead weight
+     nobody can discover; fail instead of letting it rot.
 """
 from __future__ import annotations
 
@@ -34,7 +41,22 @@ def _slug(heading: str) -> str:
     return s.replace(" ", "-")
 
 
-def check_links(path: str, text: str) -> list:
+def _anchors_of(path: str, cache: dict) -> set:
+    """Heading anchors of a markdown file (read-on-demand, cached)."""
+    if path not in cache:
+        try:
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+        except OSError:
+            text = ""
+        cache[path] = {_slug(h) for h in HEADING_RE.findall(text)}
+    return cache[path]
+
+
+def check_links(path: str, text: str, anchor_cache: dict,
+                targets: set) -> list:
+    """Validate one file's links; resolved relative targets land in
+    ``targets`` (absolute paths) for the orphan pass."""
     errors = []
     anchors = {_slug(h) for h in HEADING_RE.findall(text)}
     for target in LINK_RE.findall(text):
@@ -54,6 +76,29 @@ def check_links(path: str, text: str) -> list:
         if not os.path.exists(resolved):
             errors.append(f"{path}: broken link {target!r} "
                           f"(no such file {resolved})")
+            continue
+        if resolved != os.path.abspath(path):
+            targets.add(resolved)      # self-links don't de-orphan a doc
+        if anchor and resolved.endswith(".md"):
+            if _slug(anchor) not in _anchors_of(resolved, anchor_cache):
+                errors.append(
+                    f"{path}: dead anchor {target!r} (no heading "
+                    f"'#{anchor}' in {os.path.relpath(resolved, ROOT)})")
+    return errors
+
+
+def check_orphans(checked_files, targets: set) -> list:
+    """Every docs/*.md must be linked from README or another doc."""
+    errors = []
+    for path in checked_files:
+        apath = os.path.abspath(path)
+        rel = os.path.relpath(apath, ROOT)
+        if os.path.dirname(rel) != "docs":
+            continue                       # only docs/ pages need inbound links
+        if apath not in targets:
+            errors.append(
+                f"{rel}: orphan doc — not linked from README.md or any "
+                f"other doc (add it to the Documentation index)")
     return errors
 
 
@@ -77,24 +122,33 @@ def check_doctests(path: str, text: str) -> list:
 
 
 def main(argv) -> int:
+    full_set = not argv
     files = argv or (sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
                      + [os.path.join(ROOT, "README.md")])
     errors = []
     n_tests = 0
+    anchor_cache: dict = {}
+    link_targets: set = set()
     for path in files:
         with open(path, encoding="utf-8") as f:
             text = f.read()
-        errors += check_links(path, text)
+        errors += check_links(path, text, anchor_cache, link_targets)
         blocks = [b for b in FENCE_RE.findall(text) if ">>>" in b]
         n_tests += len(blocks)
         errors += check_doctests(path, text)
         print(f"[check_docs] {os.path.relpath(path, ROOT)}: "
               f"{len(LINK_RE.findall(text))} links, "
               f"{len(blocks)} doctest fences")
+    if full_set:
+        # the orphan check needs the complete link graph: skip it when an
+        # explicit file subset was requested (inbound links may live in
+        # files outside the subset)
+        errors += check_orphans(files, link_targets)
     if errors:
         print("\n".join(errors), file=sys.stderr)
         return 1
-    print(f"[check_docs] OK ({len(files)} files, {n_tests} doctest fences)")
+    print(f"[check_docs] OK ({len(files)} files, {n_tests} doctest fences"
+          + (", orphan check on" if full_set else "") + ")")
     return 0
 
 

@@ -8,20 +8,23 @@ Public surface:
   * :class:`BatchToCompletionEngine` — legacy fixed-batch baseline.
   * :class:`Request` — one generation request.
   * :class:`PagedKVCache` / :class:`PageAllocator` /
-    :class:`PagePoolExhausted` — the paged cache memory system.
+    :class:`PagePoolExhausted` — the paged cache memory system, with
+    ref-counted pages and automatic shared-prefix reuse
+    (:class:`PrefixCache` / :class:`PrefixMatch`).
   * :class:`SlotScheduler` — admission / eviction / preemption policy.
 
-See docs/serving.md for the engine lifecycle, cache layout and the
-sharded-serving mesh recipes.
+See docs/serving.md for the engine lifecycle, cache layout, prefix
+caching, and the sharded-serving mesh recipes.
 """
 from .engine import BatchToCompletionEngine, Engine, greedy_generate
 from .kv_cache import (PageAllocator, PagePoolExhausted, PagedKVCache,
-                       PageTable)
+                       PageTable, PrefixCache, PrefixMatch)
 from .router import ReplicaRouter
 from .scheduler import Request, Slot, SlotPhase, SlotScheduler
 
 __all__ = [
     "BatchToCompletionEngine", "Engine", "greedy_generate",
     "PageAllocator", "PagePoolExhausted", "PagedKVCache", "PageTable",
-    "ReplicaRouter", "Request", "Slot", "SlotPhase", "SlotScheduler",
+    "PrefixCache", "PrefixMatch", "ReplicaRouter", "Request", "Slot",
+    "SlotPhase", "SlotScheduler",
 ]

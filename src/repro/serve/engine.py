@@ -102,6 +102,14 @@ class Engine:
         pages_per_slot`` (no oversubscription). Smaller pools admit fewer
         concurrent tokens and may trigger preemption.
       prefill_chunk: static prefill chunk width (must divide max_seq).
+      prefix_cache: automatic prefix caching (default on). Fully written
+        prompt pages are content-hash indexed as prefill covers them; a
+        later request sharing a page-aligned prompt prefix maps those
+        pages read-shared and starts prefill at its first uncached token
+        (docs/serving.md §Prefix caching). Greedy output is unchanged —
+        shared pages hold exactly the KV a cold prefill would recompute.
+        Mamba2/hybrid state is not paged, so those families always serve
+        cold (the knob is inert there).
       mesh: optional ``jax.sharding.Mesh`` (``launch.mesh``) with a
         ``model`` axis. When given, the engine serves TENSOR-PARALLEL over
         the mesh: params are placed by ``parallel.sharding.param_pspecs``
@@ -119,7 +127,8 @@ class Engine:
                  batch_size: int = 8, max_seq: int = 512,
                  eos_id: Optional[int] = None, seed: int = 0,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefill_chunk: int = 32, mesh=None):
+                 prefill_chunk: int = 32, mesh=None,
+                 prefix_cache: bool = True):
         self.model = model
         self.params = params
         self.qc = qc
@@ -134,9 +143,17 @@ class Engine:
                 f"prefill_chunk ({self.prefill_chunk}) must divide "
                 f"max_seq ({max_seq})")
         self.kv = PagedKVCache(model, self.num_slots, max_seq,
-                               page_size=page_size, num_pages=num_pages)
+                               page_size=page_size, num_pages=num_pages,
+                               prefix_cache=prefix_cache)
         self.scheduler = SlotScheduler(self.num_slots)
         self.step_count = 0
+        # Prefix-cache accounting (docs/serving.md §Prefix caching):
+        #   prompt_tokens     — prompt tokens admitted (incl. re-admissions)
+        #   cached_tokens     — of those, served from shared pages
+        #   prefilled_tokens  — tokens actually pushed through prefill
+        self.prompt_tokens = 0
+        self.cached_tokens = 0
+        self.prefilled_tokens = 0
 
         # Per-slot temperatures live in a DEVICE-RESIDENT (num_slots,)
         # buffer refreshed only when slot occupancy changes (admission /
@@ -246,6 +263,12 @@ class Engine:
         return len(self.scheduler.waiting) + sum(
             not s.free for s in self.scheduler.slots)
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from shared pages."""
+        return self.cached_tokens / self.prompt_tokens \
+            if self.prompt_tokens else 0.0
+
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
@@ -283,6 +306,8 @@ class Engine:
         """
         for slot in self.scheduler.admit(self.kv):
             self._set_slot_temp(slot.idx, slot.req.temperature)
+            self.prompt_tokens += slot.prefill_len
+            self.cached_tokens += slot.pos    # admission set pos = matched
         progressed = False
         slot = self.scheduler.next_prefill()
         if slot is not None:
@@ -329,6 +354,10 @@ class Engine:
                 self.kv.table_device(self._table_sharding), _i32(slot.idx),
                 _i32(slot.pos), _i32(valid))
         slot.pos += valid
+        self.prefilled_tokens += valid
+        # index the prompt pages this chunk completed: from here on other
+        # requests sharing the prefix can map them instead of recomputing
+        self.kv.register_prefix(slot.idx, slot.prompt, slot.pos)
         if slot.pos < slot.prefill_len:
             return
         req = slot.req

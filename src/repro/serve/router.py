@@ -33,7 +33,7 @@ point::
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 from repro.core.lut import DENSE, QuantConfig
 
@@ -42,7 +42,16 @@ from .scheduler import Request
 
 
 class ReplicaRouter:
-    """FIFO dispatch of requests to the least-loaded engine replica.
+    """Prefix-affine, least-loaded dispatch of requests to engine replicas.
+
+    Each replica's prefix cache is local — pages cached on replica 0 are
+    invisible to replica 1 — so dispatch probes every replica's page
+    index and routes a request to the replica holding the LONGEST cached
+    prefix of its prompt (cache-hit tokens beat a small load imbalance:
+    they skip whole prefill chunks). Requests with no cached prefix
+    anywhere fall back to least-loaded, FIFO within a replica; ties pick
+    the lowest replica index. Pass ``prefix_affinity=False`` for pure
+    least-loaded dispatch (e.g. to measure the affinity win).
 
     All replicas must be configured identically (same ``max_seq``, page
     pool, ...): admissibility is checked against whichever replica a
@@ -52,10 +61,20 @@ class ReplicaRouter:
     single engine.
     """
 
-    def __init__(self, engines: Sequence[Engine]):
+    def __init__(self, engines: Sequence[Engine],
+                 prefix_affinity: bool = True,
+                 affinity_load_slack: Optional[int] = None):
         if not engines:
             raise ValueError("ReplicaRouter needs at least one engine")
         self.engines: List[Engine] = list(engines)
+        self.prefix_affinity = prefix_affinity
+        # Affinity must not collapse DP onto one hot replica: only
+        # replicas within `slack` load of the least-loaded are affinity
+        # candidates. One slot-batch of queueing is roughly where waiting
+        # starts to cost more than the prefill a cache hit saves.
+        self.affinity_load_slack = (affinity_load_slack
+                                    if affinity_load_slack is not None
+                                    else self.engines[0].num_slots)
 
     # ------------------------------------------------------------------
     # construction
@@ -100,12 +119,42 @@ class ReplicaRouter:
     def _least_loaded(self) -> Engine:
         return min(self.engines, key=lambda e: e.load)
 
+    def _best_replica(self, req: Request) -> Engine:
+        """Longest cached prompt prefix wins among near-idle replicas;
+        load breaks ties.
+
+        Affinity is bounded: a replica more than ``affinity_load_slack``
+        requests busier than the least-loaded one is skipped even on a
+        hit — otherwise a workload where EVERY request shares one system
+        prompt would serialize onto the first replica that cached it
+        while the rest sit idle (the spilled replica warms its own cache
+        on the first miss, restoring affinity there).
+
+        The probe (``kv.match_prefix``) is read-only — no pages are
+        retained until the chosen replica's scheduler actually admits
+        the request (it re-matches then, so a probe gone stale by
+        eviction only costs the affinity, never correctness)."""
+        if not self.prefix_affinity:
+            return self._least_loaded()
+        tokens = list(req.tokens) + list(req.out_tokens)
+        load_cap = min(e.load for e in self.engines) \
+            + self.affinity_load_slack
+        best, best_key = None, None
+        for i, eng in enumerate(self.engines):
+            probe = eng.kv.match_prefix(tokens)
+            hit = probe.tokens if eng.load <= load_cap else 0
+            key = (-hit, eng.load, i)
+            if best_key is None or key < best_key:
+                best, best_key = eng, key
+        return best
+
     def submit(self, req: Request) -> Engine:
-        """Dispatch ``req`` to the least-loaded replica (ties: lowest
+        """Dispatch ``req`` to the replica whose cache holds the longest
+        prefix of its prompt, falling back to least-loaded (ties: lowest
         index). Returns the engine it landed on. Raises
         :class:`PagePoolExhausted` for never-servable requests, exactly
         like ``Engine.submit``."""
-        eng = self._least_loaded()
+        eng = self._best_replica(req)
         eng.submit(req)
         return eng
 

@@ -46,6 +46,9 @@ class Request:
       done: set once the request finishes (EOS / budget / truncation).
       arrival / first_token_step / finish_step: engine-step timestamps for
         latency reporting (arrival is caller-settable; see serve_demo).
+      cached_tokens: prompt tokens served from the prefix cache instead of
+        being prefilled, accumulated across (re-)admissions — the
+        per-request cache-hit stat surfaced in results.
     """
     tokens: List[int]
     max_new_tokens: int = 32
@@ -55,6 +58,7 @@ class Request:
     arrival: Optional[int] = None
     first_token_step: Optional[int] = None
     finish_step: Optional[int] = None
+    cached_tokens: int = 0
 
 
 class SlotPhase(enum.Enum):
@@ -66,12 +70,15 @@ class SlotPhase(enum.Enum):
 @dataclasses.dataclass
 class Slot:
     """One batch lane. ``pos`` counts the tokens whose KV/state is cached;
-    ``next_token`` is the sampled-but-not-yet-decoded token id."""
+    ``next_token`` is the sampled-but-not-yet-decoded token id;
+    ``prompt`` is the admission-time prompt (request tokens + any
+    re-queued generated tokens), built once instead of per chunk."""
     idx: int
     phase: SlotPhase = SlotPhase.FREE
     req: Optional[Request] = None
     pos: int = 0
     prefill_len: int = 0          # prompt length incl. re-queued tokens
+    prompt: List[int] = dataclasses.field(default_factory=list)
     next_token: Optional[int] = None
 
     @property
@@ -110,6 +117,11 @@ class SlotScheduler:
         the first request whose prompt pages don't fit *right now* (FIFO —
         no reordering, so no starvation). Raises :class:`PagePoolExhausted`
         via ``check_admissible`` for requests that could never fit.
+
+        Prefix caching: the request's prompt is probed against the page
+        index first; matched pages are mapped read-shared (only UNSHARED
+        pages count against capacity) and the slot starts prefill at the
+        first uncached token (``slot.pos``).
         """
         admitted: List[Slot] = []
         for slot in self.slots:
@@ -124,15 +136,19 @@ class SlotScheduler:
             # the engine's eviction rule), and a preempted request can
             # legitimately come back at that boundary.
             kv.check_admissible(len(prompt))
-            if not kv.can_fit(len(prompt)):
+            match = kv.match_prefix(prompt)
+            if not kv.can_fit(len(prompt), match):
                 break                              # wait for evictions
             self.waiting.popleft()
+            matched = kv.adopt_prefix(slot.idx, match)
             kv.ensure(slot.idx, len(prompt))
             slot.req = req
             slot.phase = SlotPhase.PREFILL
-            slot.pos = 0
+            slot.pos = matched           # prefill starts past the reuse
             slot.prefill_len = len(prompt)
+            slot.prompt = prompt
             slot.next_token = None
+            req.cached_tokens += matched
             admitted.append(slot)
         if (self.waiting and not admitted
                 and all(s.free for s in self.slots)):
@@ -162,9 +178,9 @@ class SlotScheduler:
         """The next ``chunk`` prompt tokens for a PREFILL slot (unpadded).
 
         A preempted request's already-generated tokens are part of the
-        prompt here — recompute-style resumption."""
-        prompt = list(slot.req.tokens) + list(slot.req.out_tokens)
-        return prompt[slot.pos:slot.pos + chunk]
+        prompt here (``slot.prompt``, built once at admission) —
+        recompute-style resumption."""
+        return slot.prompt[slot.pos:slot.pos + chunk]
 
     def finish_prefill(self, slot: Slot, first_token: int) -> None:
         """Prefill complete: switch to DECODE with the sampled token."""
@@ -173,15 +189,19 @@ class SlotScheduler:
 
     # -- eviction / preemption ----------------------------------------------
     def evict(self, slot: Slot, kv: PagedKVCache) -> None:
-        """Release a finished slot: pages back to the pool, slot FREE.
+        """Release a finished slot: decref its pages, slot FREE.
 
-        The Mamba2 state needs no reset here — the next occupant's first
-        prefill chunk reads zeros (``Model._slot_state_view``)."""
+        A page shared with another slot stays live (its refcount is still
+        positive); an unreferenced page that the prefix cache indexes is
+        parked for future reuse; everything else returns to the free
+        list. The Mamba2 state needs no reset here — the next occupant's
+        first prefill chunk reads zeros (``Model._slot_state_view``)."""
         kv.release(slot.idx)
         slot.req = None
         slot.phase = SlotPhase.FREE
         slot.pos = 0
         slot.prefill_len = 0
+        slot.prompt = []
         slot.next_token = None
 
     def preempt_youngest(self, kv: PagedKVCache,

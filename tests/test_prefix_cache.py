@@ -1,0 +1,306 @@
+"""Shared-prefix KV reuse: refcount invariants, CoW, parity, routing."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import precompute_model
+from repro.core.lut import DENSE, QuantConfig
+from repro.models.model import Model
+from repro.serve import (Engine, PageAllocator, PagePoolExhausted, PageTable,
+                         ReplicaRouter, Request)
+
+KEY = jax.random.PRNGKey(0)
+
+# a 16-token "system prompt" shared across requests (2 pages at page_size 8)
+SYS = [(3 * j) % 40 + 2 for j in range(16)]
+
+
+# ---------------------------------------------------------------------------
+# allocator refcount invariants (host-side, no device compute)
+# ---------------------------------------------------------------------------
+
+def test_allocator_double_free_rejected():
+    a = PageAllocator(4)
+    (p,) = a.alloc(1)
+    a.free([p])
+    with pytest.raises(ValueError, match="double-free"):
+        a.free([p])
+    assert a.available == 4          # the failed free corrupted nothing
+
+
+def test_decref_to_zero_frees_exactly_once():
+    a = PageAllocator(4)
+    (p,) = a.alloc(1)
+    assert a.refcount(p) == 1
+    a.incref(p)                      # shared by a second slot
+    assert a.refcount(p) == 2
+    a.free([p])                      # first holder evicts
+    assert a.refcount(p) == 1
+    assert a.available == 3          # still referenced: NOT freed
+    a.free([p])                      # last holder evicts
+    assert a.refcount(p) == 0
+    assert a.available == 4          # freed exactly once, exactly now
+    with pytest.raises(ValueError):
+        a.incref(p)                  # refcount-0 pages cannot be increfed
+    with pytest.raises(ValueError):
+        a.decref(p)
+
+
+def test_revive_and_restore_guard_refcounts():
+    a = PageAllocator(2)
+    (p,) = a.alloc(1)
+    with pytest.raises(ValueError):
+        a.revive(p)                  # live page: revive is invalid
+    with pytest.raises(ValueError):
+        a.restore(p)                 # live page: restore is invalid
+    a.decref(p)                      # parked (caller kept it off the list)
+    a.revive(p)
+    assert a.refcount(p) == 1
+
+
+# ---------------------------------------------------------------------------
+# page-table prefix index (host-side)
+# ---------------------------------------------------------------------------
+
+def test_register_match_park_and_lru_reclaim():
+    pt = PageTable(num_slots=2, max_seq=32, page_size=8, num_pages=4)
+    pt.ensure(0, 16)                       # 2 pages
+    pt.register_prefix(0, SYS, 16)
+    assert pt.cached_pages == 2
+    # longer prompt sharing the 2-page prefix: both pages match
+    m = pt.match_prefix(SYS + [77, 78, 79])
+    assert m.tokens == 16 and m.reused_pages == 2 and m.cow_page is None
+    pt.release(0)                          # unreferenced but indexed: parked
+    assert pt.live_pages == 0
+    assert pt.available_pages == 4         # 2 free + 2 reclaimable
+    assert pt.allocator.available == 2     # ...but NOT on the free list
+    m = pt.match_prefix(SYS + [77])        # parked pages still match
+    assert m.tokens == 16
+    pt.ensure(1, 32)                       # needs all 4 pages: reclaims LRU
+    assert pt.allocator.available == 0 and pt.cached_pages == 0
+    assert pt.match_prefix(SYS + [77]).tokens == 0   # index dropped
+
+
+def test_full_prompt_match_becomes_cow_fork():
+    pt = PageTable(num_slots=2, max_seq=32, page_size=8, num_pages=4)
+    pt.ensure(0, 16)
+    pt.register_prefix(0, SYS, 16)
+    m = pt.match_prefix(list(SYS))         # identical prompt, page-aligned
+    assert m.tokens == 15                  # last token must run prefill
+    assert m.reused_pages == 1 and m.cow_page is not None
+    pair = pt.adopt_prefix(1, m)
+    assert pair is not None
+    src, dst = pair
+    assert src == m.cow_page and dst not in (m.pages + [src])
+    # slot 1 row: shared page + private fork; donor page still live via slot 0
+    assert pt.table[1, 0] == m.pages[0] and pt.table[1, 1] == dst
+    assert pt.allocator.refcount(m.pages[0]) == 2
+    assert pt.allocator.refcount(src) == 1         # only slot 0 holds it now
+    pt.release(1)
+    assert pt.allocator.refcount(m.pages[0]) == 1  # shared decref, not free
+
+
+def test_eviction_never_frees_pages_shared_with_another_slot():
+    pt = PageTable(num_slots=2, max_seq=32, page_size=8, num_pages=4)
+    pt.ensure(0, 16)
+    pt.register_prefix(0, SYS, 16)
+    m = pt.match_prefix(SYS + [77, 78])
+    pt.adopt_prefix(1, m)                  # slot 1 shares both pages
+    pt.ensure(1, 18)                       # + its own tail page
+    free_before = pt.allocator.available
+    pt.release(0)                          # "preempted" donor evicts
+    # the shared pages are still referenced by slot 1: nothing hit the
+    # free list, and slot 1's row still points at live pages
+    assert pt.allocator.available == free_before
+    for lp in range(2):
+        assert pt.allocator.refcount(pt.table[1, lp]) == 1
+    pt.release(1)                          # now they park (indexed), tail frees
+    assert pt.live_pages == 0
+    assert pt.allocator.available == free_before + 1   # tail page only:
+    assert pt.cached_pages == 2            # the indexed pair parked instead
+    assert pt.available_pages == 4         # but counts as capacity
+
+
+def test_adopt_rolls_back_when_cow_fork_cannot_allocate():
+    pt = PageTable(num_slots=3, max_seq=32, page_size=8, num_pages=3)
+    pt.ensure(0, 16)
+    pt.register_prefix(0, SYS, 16)
+    pt.ensure(2, 8)                        # burn the last free page
+    m = pt.match_prefix(list(SYS))         # needs 1 fresh page for the fork
+    assert m.cow_page is not None
+    with pytest.raises(PagePoolExhausted):
+        pt.adopt_prefix(1, m)
+    assert pt.table[1, 0] == -1            # row rolled back
+    assert pt.allocator.refcount(m.pages[0]) == 1    # retain undone
+
+
+# ---------------------------------------------------------------------------
+# engine-level: warm == cold (token-identical), CoW content, stats
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+    m = Model(cfg)
+    return m, m.init(KEY, DENSE)
+
+
+def _mk_engine(m, params, qc=DENSE, slots=2, **kw):
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 4)
+    return Engine(m, params, qc, batch_size=slots, **kw)
+
+
+def _serve_sequence(eng, reqs):
+    """Submit + drain one at a time (so earlier requests warm the cache)."""
+    for r in reqs:
+        eng.submit(r)
+        eng.run_until_idle()
+    return reqs
+
+
+def _shared_prefix_reqs(n=3, new=4):
+    return [Request(tokens=SYS + [50 + i], max_new_tokens=new)
+            for i in range(n)]
+
+
+def test_warm_matches_cold_dense(qwen):
+    m, params = qwen
+    cold = _serve_sequence(_mk_engine(m, params, prefix_cache=False),
+                           _shared_prefix_reqs())
+    eng = _mk_engine(m, params)
+    warm = _serve_sequence(eng, _shared_prefix_reqs())
+    for c, w in zip(cold, warm):
+        assert w.out_tokens == c.out_tokens
+    assert warm[0].cached_tokens == 0          # first request seeds the cache
+    assert all(r.cached_tokens == 16 for r in warm[1:])
+    assert eng.cached_tokens == 32
+    assert eng.prefilled_tokens == eng.prompt_tokens - eng.cached_tokens
+    assert 0.5 < eng.prefix_hit_rate < 1.0
+    assert eng.kv.live_pages == 0              # everything evicted or parked
+
+
+def test_warm_matches_cold_lut_infer(qwen):
+    m, _ = qwen
+    qc_t = QuantConfig(mode="lut_train", v=4, c=8)
+    qc_i = QuantConfig(mode="lut_infer", v=4, c=8, impl="ref")
+    params = precompute_model(m.init(KEY, qc_t), qc_i)
+    cold = _serve_sequence(
+        _mk_engine(m, params, qc=qc_i, prefix_cache=False),
+        _shared_prefix_reqs(n=2, new=3))
+    eng = _mk_engine(m, params, qc=qc_i)
+    warm = _serve_sequence(eng, _shared_prefix_reqs(n=2, new=3))
+    for c, w in zip(cold, warm):
+        assert w.out_tokens == c.out_tokens
+    assert warm[1].cached_tokens == 16
+
+
+def test_cow_fork_preserves_donor_page_contents(qwen):
+    """Identical page-aligned prompts: the second request forks the last
+    shared page, and the fork must carry the donor's KV rows verbatim."""
+    m, params = qwen
+    eng = _mk_engine(m, params)
+    a = Request(tokens=list(SYS), max_new_tokens=3)
+    eng.run([a])
+    match = eng.kv.match_prefix(list(SYS))
+    assert match.cow_page is not None
+    src = match.cow_page
+    before = np.asarray(eng.kv.data["k"])[:, src].copy()
+    eng.kv.adopt_prefix(1, match)              # slot 1 is free
+    dst = int(eng.kv.table.table[1, 1])
+    after = np.asarray(eng.kv.data["k"])
+    np.testing.assert_array_equal(after[:, dst], before)
+    np.testing.assert_array_equal(after[:, src], before)   # donor untouched
+    assert eng.kv.cow_forks == 1
+    eng.kv.release(1)
+    # and end-to-end: the forked path generates the same tokens
+    b = Request(tokens=list(SYS), max_new_tokens=3)
+    eng.run([b])
+    assert b.out_tokens == a.out_tokens
+    assert b.cached_tokens == 15               # all but the final token
+
+
+def test_oversubscribed_shared_prefix_completes_with_parity(qwen):
+    """Preemption under pool pressure decrefs shared pages (never a
+    double-free) and re-admission may rejoin via the cache — outputs must
+    still match solo runs."""
+    m, params = qwen
+    reqs = [Request(tokens=SYS + [60 + i], max_new_tokens=10)
+            for i in range(2)]
+    _mk_engine(m, params, num_pages=5).run(reqs)
+    for r in reqs:
+        assert r.done and len(r.out_tokens) == 10
+        solo = Request(tokens=list(r.tokens), max_new_tokens=10)
+        _mk_engine(m, params, slots=1).run([solo])
+        assert r.out_tokens == solo.out_tokens
+
+
+def test_prefix_cache_disabled_knob(qwen):
+    m, params = qwen
+    eng = _mk_engine(m, params, prefix_cache=False)
+    assert eng.kv.table.prefix is None
+    _serve_sequence(eng, _shared_prefix_reqs())
+    assert eng.cached_tokens == 0 and eng.prefix_hit_rate == 0.0
+
+
+# ---------------------------------------------------------------------------
+# non-paged families must cleanly report zero reusable prefix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["mamba2-2.7b", "zamba2-1.2b"])
+def test_recurrent_families_bypass_reuse(name):
+    cfg = get_smoke_config(name).replace(attn_impl="naive")
+    m = Model(cfg)
+    params = m.init(KEY, DENSE)
+    eng = _mk_engine(m, params)
+    assert eng.kv.match_prefix(list(SYS)).tokens == 0
+    reqs = _shared_prefix_reqs(n=2, new=4)
+    _serve_sequence(eng, reqs)
+    assert eng.cached_tokens == 0              # no reuse, no corruption:
+    for r in reqs:                             # parity with solo runs
+        assert r.cached_tokens == 0
+        solo = Request(tokens=list(r.tokens), max_new_tokens=4)
+        _mk_engine(m, params, slots=1).run([solo])
+        assert r.out_tokens == solo.out_tokens
+
+
+# ---------------------------------------------------------------------------
+# router prefix affinity
+# ---------------------------------------------------------------------------
+
+def test_router_routes_to_replica_with_longest_prefix(qwen):
+    m, params = qwen
+    router = ReplicaRouter([_mk_engine(m, params), _mk_engine(m, params)])
+    warmup = Request(tokens=SYS + [50], max_new_tokens=2)
+    assert router.submit(warmup) is router.engines[0]    # load tie: lowest
+    router.run_until_idle()
+    # replica 0 now caches SYS; make it BUSIER than replica 1, then show
+    # affinity overrides least-loaded for a shared-prefix request...
+    router.engines[0].submit(Request(tokens=[9, 9], max_new_tokens=2))
+    hot = Request(tokens=SYS + [51], max_new_tokens=2)
+    assert router.submit(hot) is router.engines[0]
+    # ...while a request with no cached prefix falls back to least-loaded
+    cold = Request(tokens=[30, 31, 32], max_new_tokens=2)
+    assert router.submit(cold) is router.engines[1]
+    router.run_until_idle()
+    assert hot.cached_tokens == 16
+    # affinity is load-bounded: a replica far busier than the least-
+    # loaded one loses its hit, so hot shared-prefix traffic spills to
+    # idle replicas instead of serializing onto the warm one
+    for k in range(router.affinity_load_slack + 1):
+        router.engines[0].submit(Request(tokens=[9, 9 + k],
+                                         max_new_tokens=2))
+    spilled = Request(tokens=SYS + [53], max_new_tokens=2)
+    assert router.submit(spilled) is router.engines[1]
+    router.run_until_idle()
+    assert spilled.cached_tokens == 0          # replica 1 served it cold...
+    assert router.engines[1].kv.match_prefix(SYS + [54]).tokens == 16
+    # ...and is now warm itself (future hits can land on either replica)
+    # affinity off: pure least-loaded dispatch
+    plain = ReplicaRouter([_mk_engine(m, params), _mk_engine(m, params)],
+                          prefix_affinity=False)
+    plain.engines[0].submit(Request(tokens=[9, 9], max_new_tokens=2))
+    assert plain.submit(Request(tokens=SYS + [52], max_new_tokens=2)) \
+        is plain.engines[1]
