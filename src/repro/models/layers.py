@@ -325,6 +325,51 @@ def _sdpa_local(q, k, v, window: int):
     return out.reshape(b, s, h, d).astype(q.dtype)
 
 
+def _sdpa_verify(q, k_cache, v_cache, k_new, v_new, pos, window):
+    """Multi-token verify over a read-only cache + the proposed tokens.
+
+    The speculative-decoding verify step scores S proposed tokens per row
+    in one call: query t of row b sits at absolute position pos[b] + t and
+    attends (a) committed cache rows < pos[b] and (b) the proposed tokens
+    0..t themselves, whose K/V arrive fresh — they are NOT in the cache
+    yet (the caller scatters the slab afterwards, exactly like decode).
+    Cache rows >= pos[b] are masked: they hold draft-phase or stale KV.
+
+    q (B,S,H,D); k_cache/v_cache (B,T,KVH,D); k_new/v_new (B,S,KVH,D).
+    pos: (B,) per-row committed lengths (-1 = inactive lane: every cache
+    row is masked and the row attends only its own fresh tokens — the
+    output is discarded by the caller). Returns (B, S, H·D).
+    """
+    b, s, h, d = q.shape
+    t, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, d)
+    scale = d ** -0.5
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    win = jnp.asarray(window)
+    qi = jnp.arange(s)                                   # in-round index
+    # cache part: kj < pos[b], windowed against absolute query positions
+    kj = jnp.arange(t)
+    mc = kj[None, None, :] < pos_b[:, None, None]        # (B, 1, T)
+    q_abs = pos_b[:, None] + qi[None, :]                 # (B, S)
+    mc = mc & jnp.where(win > 0,
+                        kj[None, None, :] > q_abs[:, :, None] - win, True)
+    # self part: fresh token j visible to query t iff j <= t (causal)
+    ms = qi[None, :] <= qi[:, None]                      # (S, S)
+    ms = ms & jnp.where(win > 0, qi[None, :] > qi[:, None] - win, True)
+    k_all = jnp.concatenate([k_cache, k_new], axis=1)    # (B, T+S, KVH, D)
+    v_all = jnp.concatenate([v_cache, v_new], axis=1)
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(mc, (b, s, t)),
+         jnp.broadcast_to(ms[None], (b, s, s))], axis=-1)  # (B, S, T+S)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg, k_all,
+                    preferred_element_type=jnp.float32) * scale
+    sc = jnp.where(mask[:, None, None], sc, -1e30)
+    probs = jax.nn.softmax(sc, axis=-1).astype(v_all.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_all)
+    return out.reshape(b, s, h * d).astype(q.dtype)
+
+
 def _sdpa_decode_combine(q, k_cache, v_cache, k_new, v_new, pos, window,
                          kv_start=0):
     """Single-token decode over an *unmodified* cache + the new token.
@@ -466,12 +511,21 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
         q = rope(q.reshape(b, s, h, hd), positions, cfg.rope_theta)
         k = rope(k.reshape(b, s, kvh, hd), positions, cfg.rope_theta)
         v = v.reshape(b, s, kvh, hd)
-    if decode_slab and cache is not None and s == 1 \
-            and cfg.head_layout != "hd":
-        out = _sdpa_decode_combine(q, cache["k"].astype(x.dtype),
-                                   cache["v"].astype(x.dtype),
-                                   k.astype(x.dtype), v.astype(x.dtype),
-                                   q_offset, window, kv_start=kv_start)
+    if decode_slab and cache is not None and cfg.head_layout != "hd":
+        if s == 1:
+            out = _sdpa_decode_combine(q, cache["k"].astype(x.dtype),
+                                       cache["v"].astype(x.dtype),
+                                       k.astype(x.dtype), v.astype(x.dtype),
+                                       q_offset, window, kv_start=kv_start)
+        else:
+            # multi-token verify (speculative decoding): the cache stays
+            # read-only; the S proposed tokens attend committed rows
+            # < q_offset[b] plus each other causally (kv_start is the
+            # paged engine's static 0 here).
+            out = _sdpa_verify(q, cache["k"].astype(x.dtype),
+                               cache["v"].astype(x.dtype),
+                               k.astype(x.dtype), v.astype(x.dtype),
+                               q_offset, window)
         out, r4 = proj(p["wo"], out, qc)
         slab = {"k": k.astype(cache["k"].dtype),
                 "v": v.astype(cache["v"].dtype)}

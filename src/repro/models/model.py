@@ -144,7 +144,8 @@ class Model:
     def _run_blocks(self, params: Params, x: jax.Array, qc: QuantConfig,
                     q_offset, prefix_len,
                     cache: Optional[Params] = None,
-                    kv_start=0, valid_len=None, return_slabs: bool = False):
+                    kv_start=0, valid_len=None, return_slabs: bool = False,
+                    multi_slab: bool = False):
         """Scan over the layer stack. Returns (x, recon, moe_aux, new_cache).
 
         q_offset: scalar, or (B,) per-row decode positions (paged serving).
@@ -157,10 +158,15 @@ class Model:
           new-token KV slabs instead of writing them into ``cache`` at
           ``q_offset`` (the paged-cache caller scatters them itself; this
           is what makes per-slot write positions possible).
+        multi_slab: treat a MULTI-token input like the decode slab path
+          (speculative verify): the cache stays read-only, per-row
+          q_offset positions are honoured, and each layer emits a
+          (B, S, KVH, HD) fresh-KV slab. Attention families only;
+          requires ``return_slabs``.
         """
         cfg = self.cfg
         windows = self._windows()
-        decode = cache is not None and x.shape[1] == 1
+        decode = cache is not None and (x.shape[1] == 1 or multi_slab)
 
         if cfg.family in ATTN_FAMILIES:
             # Cache handling [§Perf I3/I5]:
@@ -782,6 +788,80 @@ class Model:
                       "attn": attn}
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._head(params, x)[:, 0]
+        return logits, new_kv
+
+    def verify_paged(self, params: Params, tokens: jax.Array, kv: Params,
+                     page_table: jax.Array, positions: jax.Array,
+                     n_live: jax.Array, qc: QuantConfig = DENSE,
+                     act_sharding=None):
+        """Score T proposed tokens per slot in ONE call (speculative verify).
+
+        Row b feeds tokens[b, 0:T] at absolute positions positions[b] ..
+        positions[b]+T-1: column 0 is the slot's committed-but-undecoded
+        next token, columns 1.. are draft proposals. Token t's query
+        attends committed cache rows < positions[b] plus proposed tokens
+        0..t (their K/V computed fresh in this call — target numerics),
+        so logits[b, t] is exactly the target distribution after
+        consuming tokens[b, :t+1], bit-for-bit the context a sequential
+        :meth:`decode_paged` chain would build.
+
+        Args:
+          tokens: (num_slots, T) int32 proposals; dead columns carry dummy
+            ids.
+          positions: (num_slots,) committed length of each participating
+            slot; -1 = lane not in this verify (free / mid-prefill).
+          n_live: (num_slots,) live token columns per row (0 for -1
+            lanes). Columns >= n_live[b] scatter their KV to the trash
+            page and their logits are garbage the caller must ignore.
+
+        Returns (logits (num_slots, T, V), updated kv). Live columns'
+        fresh KV is written through the page table at positions[b]+t —
+        pages covering positions[b]+n_live[b] tokens must be allocated.
+        The caller commits the accepted prefix by advancing ``slot.pos``
+        and rolls back the rejected tail by NOT advancing over it: rows
+        >= pos are never attended and are overwritten before ``pos``
+        crosses them again (docs/speculative.md).
+
+        Attention families only: Mamba2/hybrid recurrent state is a
+        single evolving tensor that cannot be rewound page-style.
+        """
+        cfg = self.cfg
+        if cfg.family not in ATTN_FAMILIES:
+            raise NotImplementedError(
+                "verify_paged needs rewindable (paged) KV state; the "
+                f"{cfg.family!r} family's recurrent state cannot roll "
+                "back rejected draft tokens")
+        if cfg.head_layout == "hd":
+            raise NotImplementedError("paged serving requires head_layout="
+                                      "'heads'")
+        if cfg.family in ("audio", "vlm"):
+            raise NotImplementedError(
+                "paged serving covers token-prompt families only")
+        b, t_v = tokens.shape
+        x = params["embed"][tokens]
+        if act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, act_sharding)
+        pos_c = jnp.maximum(positions, 0)
+        trash = kv["k"].shape[1] - 1
+        ps = kv["k"].shape[2]
+        max_seq = page_table.shape[1] * ps
+        phys = jnp.where(page_table >= 0, page_table, trash)      # (B, NP)
+        view = self._paged_view(kv, phys)
+        x, _, _, slabs = self._run_blocks(
+            params, x, qc, q_offset=positions, prefix_len=0,
+            cache=view, return_slabs=True, multi_slab=True)
+        # scatter the T fresh rows per slot; dead columns -> trash page
+        tok_pos = pos_c[:, None] + jnp.arange(t_v)[None, :]       # (B, T)
+        live = (positions >= 0)[:, None] \
+            & (jnp.arange(t_v)[None, :] < n_live[:, None])
+        tok_pos = jnp.minimum(tok_pos, max_seq - 1)   # dead cols: clamp
+        page, off = tok_pos // ps, tok_pos % ps
+        tgt = jnp.where(live, jnp.take_along_axis(phys, page, axis=1),
+                        trash)                                    # (B, T)
+        new_kv = {key: kv[key].at[:, tgt, off].set(slabs[key])
+                  for key in ("k", "v")}
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x)                            # (B, T, V)
         return logits, new_kv
 
 

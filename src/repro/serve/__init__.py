@@ -14,17 +14,22 @@ Public surface:
   * :class:`SlotScheduler` — admission / eviction / preemption policy.
 
 See docs/serving.md for the engine lifecycle, cache layout, prefix
-caching, and the sharded-serving mesh recipes.
+caching, and the sharded-serving mesh recipes; docs/speculative.md for
+the self-speculative draft/verify/rollback loop
+(``Engine(spec_decode=SpecConfig(...))``).
 """
 from .engine import BatchToCompletionEngine, Engine, greedy_generate
 from .kv_cache import (PageAllocator, PagePoolExhausted, PagedKVCache,
                        PageTable, PrefixCache, PrefixMatch)
 from .router import ReplicaRouter
 from .scheduler import Request, Slot, SlotPhase, SlotScheduler
+from .speculative import (Drafter, ModelDrafter, NgramDrafter, SpecConfig,
+                          accept_tokens)
 
 __all__ = [
-    "BatchToCompletionEngine", "Engine", "greedy_generate",
-    "PageAllocator", "PagePoolExhausted", "PagedKVCache", "PageTable",
-    "PrefixCache", "PrefixMatch", "ReplicaRouter", "Request", "Slot",
-    "SlotPhase", "SlotScheduler",
+    "BatchToCompletionEngine", "Drafter", "Engine", "greedy_generate",
+    "ModelDrafter", "NgramDrafter", "PageAllocator", "PagePoolExhausted",
+    "PagedKVCache", "PageTable", "PrefixCache", "PrefixMatch",
+    "ReplicaRouter", "Request", "Slot", "SlotPhase", "SlotScheduler",
+    "SpecConfig", "accept_tokens",
 ]

@@ -53,10 +53,21 @@ from repro.core.lut import DENSE, QuantConfig
 
 from .kv_cache import PagedKVCache, PagePoolExhausted
 from .scheduler import Request, SlotPhase, SlotScheduler
+from .speculative import SpecConfig, accept_tokens
 
 
 def _i32(x) -> jax.Array:
     return jnp.asarray(x, jnp.int32)
+
+
+def _with_argmax(logits: jax.Array, kv):
+    """Verify-step output shaping: (logits, per-row argmax ids, kv).
+
+    The argmax is computed ON DEVICE so all-greedy speculative rounds
+    transfer only (num_slots, k+1) token ids to the host — the full
+    logits tensor is fetched lazily, and only when a temperature slot
+    needs the distributions for rejection sampling."""
+    return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), kv
 
 
 def _sample_tokens(key: jax.Array, logits: jax.Array,
@@ -110,6 +121,16 @@ class Engine:
         shared pages hold exactly the KV a cold prefill would recompute.
         Mamba2/hybrid state is not paged, so those families always serve
         cold (the knob is inert there).
+      spec_decode: optional :class:`~repro.serve.speculative.SpecConfig`
+        enabling self-speculative decoding (docs/speculative.md): a cheap
+        drafter (the target's own weights through a low-bit LUT operating
+        point, an early-exit prefix, or host-side n-gram lookup) proposes
+        up to ``k`` tokens per decoding slot and ONE batched
+        ``verify_paged`` call scores them, emitting between 1 and ``k+1``
+        tokens per round. Greedy output stays token-identical to
+        non-speculative decoding; temperature mode applies rejection
+        sampling with the residual correction. Attention (paged KV)
+        families only — recurrent state cannot roll back.
       mesh: optional ``jax.sharding.Mesh`` (``launch.mesh``) with a
         ``model`` axis. When given, the engine serves TENSOR-PARALLEL over
         the mesh: params are placed by ``parallel.sharding.param_pspecs``
@@ -128,7 +149,8 @@ class Engine:
                  eos_id: Optional[int] = None, seed: int = 0,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: int = 32, mesh=None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 spec_decode: Optional[SpecConfig] = None):
         self.model = model
         self.params = params
         self.qc = qc
@@ -174,8 +196,33 @@ class Engine:
                 lambda p, t, kv, pt, positions: model.decode_paged(
                     p, t, kv, pt, positions, qc),
                 donate_argnums=(2,))
+            self._jit_verify = jax.jit(
+                lambda p, t, kv, pt, pos, nl: _with_argmax(
+                    *model.verify_paged(p, t, kv, pt, pos, nl, qc)),
+                donate_argnums=(2,))
         else:
             self._init_sharded(mesh)
+
+        # Speculative decoding (docs/speculative.md): draft cheap, verify
+        # with the target in one multi-token call, roll back rejections.
+        self.spec = spec_decode
+        self.drafter = None
+        self.spec_rounds = 0       # verify calls issued
+        self.spec_drafted = 0      # proposals scored
+        self.spec_accepted = 0     # proposals that survived
+        self.spec_emitted = 0      # tokens emitted by spec rounds
+        if spec_decode is not None:
+            if not self.kv.paged:
+                raise ValueError(
+                    "spec_decode needs rewindable paged KV state; the "
+                    f"{model.cfg.family!r} family's recurrent state cannot "
+                    "roll back rejected draft tokens")
+            if spec_decode.k < 1:
+                raise ValueError(f"spec_decode.k must be >= 1, got "
+                                 f"{spec_decode.k}")
+            self._spec_rng = np.random.default_rng(seed)
+            self.drafter = spec_decode.build_drafter()
+            self.drafter.bind(self)
 
     def _init_sharded(self, mesh) -> None:
         """Place params + paged cache on ``mesh`` and compile the paged
@@ -209,6 +256,15 @@ class Engine:
                 p, t, kv, pt, positions, qc, act_sharding=repl),
             in_shardings=(pshard, repl, cshard, repl, repl),
             out_shardings=(repl, cshard),
+            donate_argnums=(2,))
+        self._param_sharding = pshard
+        self._cache_sharding = cshard
+        self._jit_verify = jax.jit(
+            lambda p, t, kv, pt, pos, nl: _with_argmax(
+                *model.verify_paged(p, t, kv, pt, pos, nl, qc,
+                                    act_sharding=repl)),
+            in_shardings=(pshard, repl, cshard, repl, repl, repl),
+            out_shardings=(repl, repl, cshard),
             donate_argnums=(2,))
 
     def _mesh_scope(self):
@@ -314,7 +370,10 @@ class Engine:
             self._prefill_chunk_step(slot)
             progressed = True
         if self.scheduler.decode_slots():
-            self._decode_step()
+            if self.spec is not None:
+                self._spec_decode_step()
+            else:
+                self._decode_step()
             progressed = True
         self.step_count += 1
         return progressed
@@ -326,6 +385,18 @@ class Engine:
         """Evict + clear the lane's temperature (device buffer refresh)."""
         self.scheduler.evict(slot, self.kv)
         self._set_slot_temp(slot.idx, 0.0)
+
+    def _reserve_lookahead(self, slot_idx: int, pos: int, kk: int) -> int:
+        """Reserve pages for ``kk`` draft tokens past the pending one,
+        shrinking ``kk`` instead of preempting when the pool runs short
+        (speculation is opportunistic). Returns the reserved lookahead."""
+        while kk > 0:
+            try:
+                self.kv.ensure(slot_idx, pos + kk + 1)
+                return kk
+            except PagePoolExhausted:
+                kk -= 1
+        return 0
 
     def _ensure_pages(self, slot_idx: int, n_tokens: int) -> None:
         """Grow a slot to n_tokens, preempting other slots if needed."""
@@ -408,6 +479,119 @@ class Engine:
         for s in dslots:
             s.pos += 1
             self._record_token(s, int(nxt[s.idx]))
+
+    # ------------------------------------------------------------------
+    # speculative decoding (docs/speculative.md)
+    # ------------------------------------------------------------------
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals the target accepted."""
+        return self.spec_accepted / self.spec_drafted \
+            if self.spec_drafted else 0.0
+
+    @property
+    def tokens_per_verify(self) -> float:
+        """Mean tokens emitted per verify call (1.0 = no speculation win)."""
+        return self.spec_emitted / self.spec_rounds \
+            if self.spec_rounds else 0.0
+
+    def _spec_decode_step(self) -> None:
+        """One draft/verify round over every decoding slot.
+
+        Replaces :meth:`_decode_step` when ``spec_decode`` is configured:
+        the drafter proposes up to ``k`` tokens per slot, ONE
+        ``verify_paged`` call scores them all (k+1 static token columns;
+        under-drafted slots pad with trash-redirected columns), and the
+        accepted prefix plus one target-distribution token is recorded —
+        token-identical to sequential greedy decoding when temperature
+        is 0. Rejected rows roll back: ``slot.pos`` simply does not
+        advance over them and :meth:`PagedKVCache.trim` drops tail pages
+        the rejected lookahead no longer needs.
+        """
+        # page for the committed pending token: same rules as _decode_step
+        # (preemption allowed; truncate-finish when the pool can never
+        # supply it)
+        for s in list(self.scheduler.decode_slots()):
+            if s.phase is not SlotPhase.DECODE:
+                continue
+            try:
+                self._ensure_pages(s.idx, s.pos + 1)
+            except PagePoolExhausted:
+                s.req.done = True
+                s.req.finish_step = self.step_count
+                self._evict(s)
+        dslots = self.scheduler.decode_slots()
+        if not dslots:
+            return
+        k = self.spec.k
+        # Draft lookahead is capped by sequence room and the slot's
+        # remaining generation budget (no proposal that could never be
+        # recorded), and its page reservations are OPPORTUNISTIC: shrink
+        # the lookahead rather than preempt a neighbour for speculation.
+        # A drafter that writes draft KV through the page tables needs
+        # its pages reserved BEFORE drafting; host-side drafters reserve
+        # after proposing, so a no-proposal round allocates nothing.
+        k_slot = {}
+        for s in dslots:
+            room = self.max_seq - s.pos - 1
+            budget = s.req.max_new_tokens - len(s.req.out_tokens) - 1
+            kk = max(0, min(k, room, budget))
+            if self.drafter.writes_kv:
+                kk = self._reserve_lookahead(s.idx, s.pos, kk)
+            k_slot[s.idx] = kk
+        g, n_prop, q_rows = self.drafter.propose(self, dslots, k_slot, k)
+        if not self.drafter.writes_kv:
+            for s in dslots:
+                n_prop[s.idx] = self._reserve_lookahead(
+                    s.idx, s.pos, int(n_prop[s.idx]))
+        b = self.num_slots
+        toks = np.zeros((b, k + 1), np.int32)
+        posv = np.full((b,), -1, np.int32)
+        nlive = np.zeros((b,), np.int32)
+        for s in dslots:
+            n = int(n_prop[s.idx])
+            toks[s.idx, 0] = s.next_token
+            toks[s.idx, 1:1 + n] = g[s.idx, :n]
+            posv[s.idx] = s.pos
+            nlive[s.idx] = n + 1
+        with self._mesh_scope():
+            logits, ids, self.kv.data = self._jit_verify(
+                self.params, jnp.asarray(toks), self.kv.data,
+                self.kv.table_device(self._table_sharding),
+                jnp.asarray(posv), jnp.asarray(nlive))
+        # all-greedy rounds pull only the (B, k+1) argmax ids; the full
+        # logits tensor crosses to the host only for rejection sampling
+        ids_h = np.asarray(ids)
+        lg = np.asarray(logits) if any(
+            s.req.temperature > 0.0 for s in dslots) else None
+        self.spec_rounds += 1
+        for s in dslots:
+            n = int(n_prop[s.idx])
+            draft = [int(t) for t in g[s.idx, :n]]
+            rows = None if q_rows is None else \
+                [q_rows[t][s.idx] for t in range(n)]
+            accepted, out = accept_tokens(
+                draft, None if lg is None else lg[s.idx, :n + 1],
+                s.req.temperature, self._spec_rng, rows,
+                targets=ids_h[s.idx, :n + 1])
+            self.spec_drafted += n
+            self.spec_accepted += accepted
+            req = s.req              # _record_token may evict (slot.req=None)
+            for tok in out:
+                s.pos += 1
+                self._record_token(s, tok)
+                self.spec_emitted += 1
+                if req.done:         # EOS/budget/truncation: drop the rest
+                    break
+            if not req.done:
+                # Roll back the rejected lookahead: pages wholly past the
+                # working set (committed rows plus the pending token's
+                # write row) return to the pool. On a fully accepted
+                # round `pos` advanced over everything the draft
+                # reserved, so this is a no-op on the hot path; it only
+                # fires — and only ever releases fresh refcount-1 draft
+                # pages — when rejection left a page boundary behind.
+                self.kv.trim(s.idx, s.pos + 1)
 
     def _record_token(self, slot, tok: int) -> None:
         """Append a sampled token and apply the eviction rules."""

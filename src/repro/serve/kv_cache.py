@@ -298,6 +298,16 @@ class PageTable:
         extra = self.prefix.reclaimable if self.prefix is not None else 0
         return self.allocator.available + extra
 
+    def occupancy(self) -> str:
+        """One-line pool accounting for capacity-error messages and
+        preemption logs: live (slot-referenced), cached-parked (prefix
+        LRU, reclaimable), and free pages."""
+        return (f"pool: {self.live_pages} live, "
+                f"{self.prefix.reclaimable if self.prefix else 0} "
+                f"cached-parked, {self.allocator.available} free of "
+                f"{self.allocator.num_pages} pages "
+                f"({self.page_size} tokens each)")
+
     def can_fit(self, n_tokens: int,
                 match: Optional[PrefixMatch] = None) -> bool:
         """Whether ``n_tokens`` tokens' pages could be allocated now.
@@ -331,7 +341,7 @@ class PageTable:
             raise PagePoolExhausted(
                 f"request of {n_tokens} tokens needs "
                 f"{self.pages_for(n_tokens)} pages but the pool only has "
-                f"{self.allocator.num_pages}")
+                f"{self.allocator.num_pages} ({self.occupancy()})")
 
     # -- mutation -----------------------------------------------------------
     def _alloc(self, n: int) -> List[int]:
@@ -341,7 +351,12 @@ class PageTable:
             while (self.allocator.available < n
                    and self.prefix.reclaimable):
                 self.allocator.restore(self.prefix.pop_lru())
-        return self.allocator.alloc(n)
+        try:
+            return self.allocator.alloc(n)
+        except PagePoolExhausted as e:
+            # re-raise with the pool accounting attached so capacity
+            # failures are debuggable from the message alone
+            raise PagePoolExhausted(f"{e} ({self.occupancy()})") from None
 
     def _retain(self, page: int) -> None:
         """Take a reference on a cached page: parked pages are revived
@@ -373,7 +388,7 @@ class PageTable:
         if need > self.pages_per_slot:
             raise PagePoolExhausted(
                 f"slot {slot}: {n_tokens} tokens exceed max_seq="
-                f"{self.max_seq}")
+                f"{self.max_seq} ({self.occupancy()})")
         have = len(self._slot_pages[slot])
         if need <= have:
             return
@@ -394,6 +409,30 @@ class PageTable:
             self.table[slot, :] = -1
             self._dev = None
         self._reg_state[slot] = (0, 0)
+
+    def trim(self, slot: int, n_tokens: int) -> int:
+        """Shrink a slot to the pages covering ``n_tokens`` tokens
+        (speculative-decoding rollback: rejected draft rows beyond the
+        accepted position may leave whole tail pages unused).
+
+        Only pages wholly ABOVE the keep mark are dropped, each via
+        :meth:`_release_page` — a page another slot still references
+        merely loses this slot's reference, and an indexed page parks in
+        the prefix LRU. In practice a draft tail page is always a fresh
+        refcount-1 allocation: shared prefix pages sit below ``slot.pos``
+        (prefill never rolls back), which the rollback property tests
+        assert. Returns the number of pages dropped from the row."""
+        keep = 0 if n_tokens <= 0 else self.pages_for(n_tokens)
+        row = self._slot_pages[slot]
+        if len(row) <= keep:
+            return 0
+        dropped = row[keep:]
+        del row[keep:]
+        for p in dropped:
+            self._release_page(p)
+        self.table[slot, keep:] = -1
+        self._dev = None
+        return len(dropped)
 
     # -- prefix caching -----------------------------------------------------
     def match_prefix(self, tokens) -> PrefixMatch:
@@ -574,6 +613,14 @@ class PagedKVCache:
     def release(self, slot: int) -> None:
         if self.paged:
             self.table.release(slot)
+
+    def trim(self, slot: int, n_tokens: int) -> int:
+        """Speculative rollback: drop tail pages past ``n_tokens``."""
+        return self.table.trim(slot, n_tokens) if self.paged else 0
+
+    def occupancy(self) -> str:
+        return self.table.occupancy() if self.paged else \
+            f"slot-dense cache ({self.num_slots} slots)"
 
     # -- prefix caching -----------------------------------------------------
     def match_prefix(self, tokens) -> PrefixMatch:

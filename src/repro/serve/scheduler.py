@@ -28,10 +28,13 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import logging
 from collections import deque
 from typing import Deque, List, Optional
 
 from .kv_cache import PagedKVCache, PagePoolExhausted
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -159,8 +162,7 @@ class SlotScheduler:
             n = len(req.tokens) + len(req.out_tokens)
             raise PagePoolExhausted(
                 f"request with {n} prompt tokens cannot be admitted on an "
-                f"idle engine (pool: {kv.table.allocator.num_pages} pages "
-                f"of {kv.page_size} tokens)" if kv.paged else
+                f"idle engine ({kv.occupancy()})" if kv.paged else
                 f"request with {n} prompt tokens cannot be admitted "
                 f"(max_seq={kv.max_seq})")
         return admitted
@@ -223,6 +225,9 @@ class SlotScheduler:
             return None
         victim = min(cands, key=lambda s: (s.pos, -s.idx))
         req = victim.req
+        log.info(
+            "preempting slot %d (%s, %d cached tokens) to reclaim pages; %s",
+            victim.idx, victim.phase.value, victim.pos, kv.occupancy())
         self.waiting.appendleft(req)
         self.evict(victim, kv)
         return victim

@@ -1,0 +1,413 @@
+"""Self-speculative decoding: draft cheap, verify with the target, roll back.
+
+LUT-DLA's extreme low-bit LUT path runs at a fraction of the dense cost
+with a modest accuracy drop — exactly the profile of a speculative-
+decoding *drafter*. Because the same weights already exist in both forms
+(``mode="dense"`` vs ``mode="lut_infer"`` via :class:`QuantConfig`), the
+drafter needs no second checkpoint: it is the target model driven through
+a coarser operating point (and optionally an early-exit layer prefix).
+
+Round structure (docs/speculative.md has the lifecycle diagram):
+
+  1. **draft** — ``k`` successive cheap decode steps propose tokens
+     ``g_1..g_k`` per decoding slot. The drafter runs against the SHARED
+     paged KV pool: its in-round writes land at rows ``>= slot.pos``,
+     which attention never reads back for committed context (mask is
+     ``kj < pos``) and which the verify step overwrites with
+     target-computed KV. The transient "draft KV state" therefore costs
+     zero extra pool pages beyond the round's lookahead.
+  2. **verify** — ONE batched ``Model.verify_paged`` call scores the
+     slot's pending token plus all ``k`` proposals at per-slot positions
+     and scatters target-numerics KV over the draft rows.
+  3. **accept / roll back** — greedy mode keeps the longest proposal
+     prefix matching the target argmax and emits one correction/bonus
+     token from the target distribution (token-identical to
+     non-speculative greedy by construction). Temperature mode runs
+     standard rejection sampling with the residual-distribution
+     correction (Leviathan et al., 2023), so samples are distributed
+     exactly as the target's. Rejected rows are rolled back by rewinding
+     ``slot.pos`` and trimming page-table tail pages
+     (:meth:`PageTable.trim`) — prefix-shared pages are never touched
+     (they live below ``slot.pos`` by construction; property-tested in
+     tests/test_speculative.py).
+
+Drafters:
+  * :class:`ModelDrafter` — the paper-aligned path: the target's own
+    weights through a draft :class:`QuantConfig` (e.g. ``lut_infer``
+    while the target serves dense — same codebooks, no extra params) and
+    optionally only the first ``draft_layers`` of the stack (early-exit
+    self-drafting; logits via the shared final norm + head).
+  * :class:`NgramDrafter` — zero-model-cost prompt lookup: propose the
+    continuation of an earlier occurrence of the current suffix n-gram
+    (earliest occurrence wins — it has the most continuation ahead of
+    it). No weights, no extra compute; acceptance tracks how repetitive
+    the stream is. (With one verify call per >= 1 emitted
+    token, it is also the deterministic baseline the smoke benchmark
+    asserts its speedup on.)
+
+Acceptance math lives in :func:`accept_tokens` — a pure host-side
+function, unit-tested independently of the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lut import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding operating point for :class:`~repro.serve.Engine`.
+
+    Attributes:
+      k: draft lookahead — proposals per round (per decoding slot). The
+        verify call scores ``k + 1`` token columns; emitted tokens per
+        round range from 1 (all rejected) to ``k + 1`` (all accepted +
+        bonus).
+      drafter: ``"model"`` (:class:`ModelDrafter`) or ``"ngram"``
+        (:class:`NgramDrafter`).
+      draft_qc: QuantConfig for the model drafter's forward passes;
+        ``None`` = the engine's own ``qc``. The usual LUT-DLA deployment
+        pairs a dense (or fine-LUT) target with a coarse ``lut_infer``
+        drafter over the SAME params (run
+        :func:`repro.core.precompute_model` first so the tables exist).
+      draft_layers: early-exit depth for the model drafter — run only the
+        first N layers and read logits through the shared final norm +
+        head. ``None`` = full depth.
+      ngram: max suffix length the ngram drafter matches on.
+    """
+    k: int = 4
+    drafter: str = "model"
+    draft_qc: Optional[QuantConfig] = None
+    draft_layers: Optional[int] = None
+    ngram: int = 3
+
+    def build_drafter(self) -> "Drafter":
+        if self.drafter == "model":
+            return ModelDrafter(self.draft_qc, self.draft_layers)
+        if self.drafter == "ngram":
+            return NgramDrafter(self.ngram)
+        raise ValueError(f"unknown drafter {self.drafter!r} "
+                         "(expected 'model' or 'ngram')")
+
+
+def _softmax(row: np.ndarray) -> np.ndarray:
+    e = np.exp(row.astype(np.float64) - row.max())
+    return e / e.sum()
+
+
+def accept_tokens(draft: Sequence[int], logits: Optional[np.ndarray],
+                  temperature: float, rng: np.random.Generator,
+                  q_rows: Optional[Sequence[Optional[np.ndarray]]] = None,
+                  targets: Optional[np.ndarray] = None,
+                  ) -> Tuple[int, List[int]]:
+    """Decide which proposals survive one verify round (host-side, pure).
+
+    Args:
+      draft: the ``n`` proposed tokens ``g_1..g_n``.
+      logits: (n+1, V) target verify logits; row ``i`` is the target
+        distribution AFTER consuming the slot's pending token and
+        ``g_1..g_i``. May be ``None`` for a greedy slot when ``targets``
+        is given (the engine computes the argmax on device and skips the
+        full-logits device-to-host transfer for all-greedy rounds).
+      temperature: the slot's sampling temperature (0 = greedy).
+      rng: host PRNG for the accept coin flips + residual draws.
+      q_rows: per-proposal draft distributions (each (V,) and summing to
+        1), or ``None`` rows / ``None`` entirely for a deterministic
+        drafter (one-hot: the proposal carried probability 1).
+      targets: optional precomputed per-row argmax ids (>= n+1 entries);
+        greedy mode uses them instead of ``np.argmax(logits)``.
+
+    Returns ``(accepted, tokens)``: ``accepted`` proposals survived and
+    ``tokens`` (length ``accepted + 1``) is what the round emits — the
+    surviving proposals plus one token from the target distribution (the
+    rejection-corrected residual draw, or the bonus token when everything
+    was accepted). Greedy mode is exact prefix-matching against the
+    target argmax, which makes the emitted stream token-identical to
+    non-speculative greedy decoding.
+    """
+    n = len(draft)
+    if temperature <= 0.0:
+        if targets is None:
+            targets = np.argmax(logits[:n + 1], axis=-1)
+        assert len(targets) >= n + 1, (len(targets), n)
+        a = 0
+        while a < n and draft[a] == int(targets[a]):
+            a += 1
+        return a, [int(t) for t in draft[:a]] + [int(targets[a])]
+    assert logits is not None and logits.shape[0] >= n + 1
+
+    # temperature: standard speculative rejection sampling. p_i is the
+    # target distribution that judges proposal g_{i+1}; q_i the draft
+    # distribution it was sampled from (one-hot for deterministic
+    # drafters). Accept with prob min(1, p(g)/q(g)); on rejection sample
+    # from the residual max(p - q, 0) — the correction that makes the
+    # combined procedure draw exactly from p (Leviathan et al., 2023).
+    inv_t = 1.0 / max(temperature, 1e-6)
+    for i in range(n):
+        p = _softmax(logits[i] * inv_t)
+        g = int(draft[i])
+        q = None if q_rows is None else q_rows[i]
+        q_g = 1.0 if q is None else float(q[g])
+        if q_g > 0 and rng.random() < min(1.0, float(p[g]) / q_g):
+            continue
+        if q is None:                     # one-hot drafter: remove g's mass
+            residual = p.copy()
+            residual[g] = 0.0
+        else:
+            residual = np.maximum(p - q, 0.0)
+        tot = residual.sum()
+        if tot <= 0.0:                    # degenerate (p ⊆ q): fall back to p
+            residual, tot = p, p.sum()
+        tok = int(rng.choice(residual.shape[0], p=residual / tot))
+        return i, [int(t) for t in draft[:i]] + [tok]
+    p = _softmax(logits[n] * inv_t)       # everything accepted: bonus token
+    tok = int(rng.choice(p.shape[0], p=p))
+    return n, [int(t) for t in draft] + [tok]
+
+
+class Drafter:
+    """Proposal source for one speculative round.
+
+    ``bind(engine)`` is called once by the engine; ``propose`` once per
+    round. Subclasses may read engine state (params, paged cache, slots)
+    but must only WRITE cache rows at positions ``>= slot.pos`` — the
+    verify step owns everything below.
+
+    ``writes_kv``: declare True when ``propose`` writes draft KV through
+    the page tables (the engine then reserves lookahead pages BEFORE
+    drafting; for host-side drafters it reserves after, so a round that
+    proposes nothing allocates nothing). An undeclared writer is never
+    unsafe — writes to unreserved rows redirect to the trash page — it
+    just drafts against missing context.
+    """
+
+    writes_kv = False
+
+    def bind(self, engine) -> None:                    # pragma: no cover
+        pass
+
+    def propose(self, engine, dslots, k_slot: Dict[int, int], k: int):
+        """Return ``(g, n_prop, q_rows)`` for this round.
+
+        g: (num_slots, k) int32 proposals (garbage outside live entries).
+        n_prop: (num_slots,) int — proposals actually made per slot
+          (``<= k_slot[idx]``).
+        q_rows: per-step list of (num_slots, V) draft-probability arrays
+          for temperature slots, or ``None`` for deterministic drafters.
+        """
+        raise NotImplementedError
+
+
+class ModelDrafter(Drafter):
+    """The target's own weights through a cheaper operating point.
+
+    ``draft_qc`` switches the projection mode (the LUT-DLA move: coarse
+    ``lut_infer`` drafting under a dense target — the tables come from
+    ``precompute_model`` and share the target's codebooks);
+    ``draft_layers`` truncates the stack to an early-exit prefix whose
+    hidden state reads logits through the shared final norm + head.
+
+    The drafter decodes against the shared paged pool: step ``t`` writes
+    its (draft-numerics) KV at ``pos + t`` so step ``t+1`` can attend the
+    in-round proposals; committed rows ``< pos`` are read but never
+    written, and verify overwrites every draft row with target KV.
+    With ``draft_layers`` only the first N layers' rows are written —
+    the remaining layers' draft rows keep stale values, which is safe
+    for the same reason (nothing below ``pos`` is affected).
+
+    The ``k`` autoregressive draft steps run as ONE jitted
+    ``lax.scan`` — a speculative round therefore costs two device
+    dispatches (draft-k + verify) regardless of ``k``, which is what
+    turns per-slot acceptance into wall-clock speedup on
+    dispatch-latency-bound decode. Draft-token sampling happens inside
+    the scan (greedy argmax, or per-slot-temperature categorical off the
+    engine's PRNG key); rounds with a temperature slot additionally
+    return the per-step draft distributions (``(k, num_slots, V)``) for
+    rejection sampling, while all-greedy rounds run a separately
+    compiled variant that never computes or materializes them.
+    """
+
+    writes_kv = True
+
+    def __init__(self, draft_qc: Optional[QuantConfig] = None,
+                 draft_layers: Optional[int] = None):
+        self.draft_qc = draft_qc
+        self.draft_layers = draft_layers
+        self._draft_greedy = None
+        self._draft_probs = None
+
+    def bind(self, engine) -> None:
+        model, qc = engine.model, self.draft_qc or engine.qc
+        self.qc = qc
+        n = self.draft_layers
+        if n is not None and not (0 < n <= model.cfg.num_layers):
+            raise ValueError(
+                f"draft_layers={n} out of range for a "
+                f"{model.cfg.num_layers}-layer target")
+        if n == model.cfg.num_layers:
+            n = None                       # full depth: skip the slicing
+        draft_model = model if n is None \
+            else type(model)(model.cfg.replace(num_layers=n))
+        k = engine.spec.k
+
+        def make_draft_k(with_probs: bool):
+            """Two compiled variants: all-greedy rounds skip the full-
+            vocab softmax/categorical work AND the (k, B, V) draft-
+            probability output buffer entirely."""
+
+            def draft_k(p, kv, table, first, positions, n_prop, temps,
+                        key):
+                b = first.shape[0]
+                row_keys = jax.vmap(
+                    lambda i: jax.random.fold_in(key, i))(jnp.arange(b))
+                if n is None:
+                    p_d, kv_d = p, kv
+                else:
+                    # the scan carries only the early-exit prefix's slice
+                    # of the pool; the untouched deep layers are merged
+                    # back once after the loop (one copy per ROUND, not
+                    # per step)
+                    p_d = dict(p)
+                    p_d["blocks"] = jax.tree_util.tree_map(
+                        lambda t: t[:n], p["blocks"])
+                    kv_d = {key: kv[key][:n] for key in ("k", "v")}
+
+                def body(carry, t):
+                    kv_c, cur = carry
+                    pos_t = jnp.where((positions >= 0) & (t < n_prop),
+                                      positions + t, -1)
+                    logits, kv_c = draft_model.decode_paged(
+                        p_d, cur[:, None], kv_c, table, pos_t, qc)
+                    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    if not with_probs:
+                        return (kv_c, tok), tok
+                    scaled = logits.astype(jnp.float32) \
+                        / jnp.maximum(temps, 1e-6)[:, None]
+                    probs = jax.nn.softmax(scaled, axis=-1)
+                    keys = jax.vmap(jax.random.fold_in)(
+                        row_keys, jnp.broadcast_to(t, (b,)))
+                    sampled = jax.vmap(jax.random.categorical)(keys,
+                                                               scaled)
+                    tok = jnp.where(temps > 0.0,
+                                    sampled.astype(jnp.int32), tok)
+                    return (kv_c, tok), (tok, probs)
+
+                (kv_f, _), ys = jax.lax.scan(
+                    body, (kv_d, first), jnp.arange(k, dtype=jnp.int32))
+                if n is not None:
+                    kv_f = {key: kv[key].at[:n].set(kv_f[key])
+                            for key in ("k", "v")}
+                if not with_probs:
+                    return ys, kv_f        # g (k, B)
+                g, qp = ys
+                return g, qp, kv_f         # g (k, B); qp (k, B, V)
+
+            return draft_k
+
+        if engine.mesh is None:
+            self._draft_greedy = jax.jit(make_draft_k(False),
+                                         donate_argnums=(1,))
+            self._draft_probs = jax.jit(make_draft_k(True),
+                                        donate_argnums=(1,))
+        else:
+            repl = engine._table_sharding
+            in_sh = (engine._param_sharding, engine._cache_sharding,
+                     repl, repl, repl, repl, repl, repl)
+            self._draft_greedy = jax.jit(
+                make_draft_k(False), in_shardings=in_sh,
+                out_shardings=(repl, engine._cache_sharding),
+                donate_argnums=(1,))
+            self._draft_probs = jax.jit(
+                make_draft_k(True), in_shardings=in_sh,
+                out_shardings=(repl, repl, engine._cache_sharding),
+                donate_argnums=(1,))
+
+    def propose(self, engine, dslots, k_slot: Dict[int, int], k: int):
+        b = engine.num_slots
+        first = np.zeros((b,), np.int32)
+        posv = np.full((b,), -1, np.int32)
+        n_prop = np.zeros((b,), np.int32)
+        temps = np.zeros((b,), np.float32)
+        need_q = False
+        for s in dslots:
+            first[s.idx] = s.next_token
+            posv[s.idx] = s.pos
+            n_prop[s.idx] = k_slot[s.idx]
+            if k_slot[s.idx] > 0 and s.req.temperature > 0.0:
+                temps[s.idx] = s.req.temperature
+                need_q = True
+        if n_prop.max() == 0:
+            return np.zeros((b, k), np.int32), n_prop, None
+        engine.key, sub = jax.random.split(engine.key)
+        args = (engine.params, engine.kv.data,
+                engine.kv.table_device(engine._table_sharding),
+                jnp.asarray(first), jnp.asarray(posv),
+                jnp.asarray(n_prop), jnp.asarray(temps), sub)
+        q_rows: Optional[List[np.ndarray]] = None
+        with engine._mesh_scope():
+            if need_q:
+                g, qp, engine.kv.data = self._draft_probs(*args)
+                q_rows = list(np.asarray(qp))
+            else:                  # all-greedy: no draft-prob work at all
+                g, engine.kv.data = self._draft_greedy(*args)
+        g = np.asarray(g).T.copy()         # (B, k)
+        return g, n_prop, q_rows
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup drafting: continue an earlier occurrence of the
+    current suffix n-gram (longest suffix first; EARLIEST occurrence
+    wins, since it has the most continuation ahead of it — see
+    :meth:`_lookup`). Zero model cost — one host-side scan of the slot's
+    token history per round — and deterministic (the draft distribution
+    is one-hot, so temperature-mode acceptance degrades gracefully to an
+    accept-with-prob-p(g) test)."""
+
+    def __init__(self, ngram: int = 3):
+        if ngram < 1:
+            raise ValueError(f"ngram must be >= 1, got {ngram}")
+        self.ngram = ngram
+
+    @staticmethod
+    def _lookup(hist: List[int], k: int, nmax: int) -> List[int]:
+        """Continuation of the best earlier match of a suffix n-gram.
+
+        Longest suffix first; within one suffix length the EARLIEST
+        occurrence wins (it has the most continuation ahead of it — the
+        most recent occurrence sits right before the suffix itself and
+        would only ever yield one proposal). A shorter suffix is tried
+        when a longer one cannot fill the ``k`` lookahead, so constant
+        runs propose the whole budget instead of their tail."""
+        best: List[int] = []
+        for n in range(min(nmax, len(hist) - 1), 0, -1):
+            pat = hist[-n:]
+            for i in range(0, len(hist) - n):
+                if hist[i:i + n] == pat:
+                    cont = hist[i + n:i + n + k]   # >= 1 token by range
+                    if len(cont) > len(best):
+                        best = cont
+                    break                          # earliest i for this n
+            if len(best) >= k:
+                break
+        return best
+
+    def propose(self, engine, dslots, k_slot: Dict[int, int], k: int):
+        b = engine.num_slots
+        g = np.zeros((b, k), np.int32)
+        n_prop = np.zeros((b,), np.int32)
+        for s in dslots:
+            kk = k_slot[s.idx]
+            if kk <= 0:
+                continue
+            # true token stream regardless of preemption re-queues
+            hist = list(s.req.tokens) + list(s.req.out_tokens)
+            cont = self._lookup(hist, kk, self.ngram)
+            g[s.idx, :len(cont)] = cont
+            n_prop[s.idx] = len(cont)
+        return g, n_prop, None

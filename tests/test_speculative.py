@@ -1,0 +1,427 @@
+"""Self-speculative decoding: acceptance math, rollback invariants, parity.
+
+The headline guarantee — greedy speculative output is TOKEN-IDENTICAL to
+greedy non-speculative output — is asserted end-to-end for dense and
+``lut_infer`` targets, including slots admitted mid-decode, prefix-cache
+warm starts, adversarial (always-rejecting) drafters, and page pools
+tight enough to force preemption. The rollback property tests drive the
+engine step-by-step and check after EVERY step that each physical page's
+refcount equals the number of slot rows mapping it (so a draft-reject
+rollback can neither leak a page nor decref a prefix-shared page below
+its pre-draft count).
+"""
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import precompute_model
+from repro.core.lut import DENSE, QuantConfig
+from repro.models.model import Model
+from repro.serve import (Drafter, Engine, ModelDrafter, NgramDrafter,
+                         PagePoolExhausted, PageTable, Request, SpecConfig,
+                         accept_tokens)
+from repro.serve.engine import BatchToCompletionEngine, _sample_tokens
+
+KEY = jax.random.PRNGKey(0)
+
+
+def smoke_model():
+    cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+    m = Model(cfg)
+    return m, m.init(KEY, DENSE)
+
+
+def lut_model():
+    cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+    m = Model(cfg)
+    qc_i = QuantConfig(mode="lut_infer", v=4, c=8, impl="ref")
+    params = precompute_model(
+        m.init(KEY, QuantConfig(mode="lut_train", v=4, c=8)), qc_i)
+    return m, params, qc_i
+
+
+def mixed_requests(temperature: float = 0.0):
+    """More requests than slots → admission mid-decode is exercised."""
+    return [Request(tokens=[3, 4, 5, 6], max_new_tokens=18,
+                    temperature=temperature),
+            Request(tokens=[9, 8, 7], max_new_tokens=10,
+                    temperature=temperature),
+            Request(tokens=[1, 2], max_new_tokens=14,
+                    temperature=temperature),
+            Request(tokens=[4, 4, 4, 4, 4], max_new_tokens=6,
+                    temperature=temperature)]
+
+
+def streams(reqs):
+    return [r.out_tokens for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# acceptance math (pure host-side units)
+# ---------------------------------------------------------------------------
+
+def _logits_for(targets, v=16):
+    """(len(targets), v) logits whose argmax rows are ``targets``."""
+    out = np.full((len(targets), v), -5.0, np.float32)
+    for i, t in enumerate(targets):
+        out[i, t] = 5.0
+    return out
+
+
+def test_accept_greedy_full_prefix_and_bonus():
+    rng = np.random.default_rng(0)
+    # target argmax chain: 7, 8, 9, bonus 3
+    a, out = accept_tokens([7, 8, 9], _logits_for([7, 8, 9, 3]), 0.0, rng)
+    assert (a, out) == (3, [7, 8, 9, 3])
+
+
+def test_accept_greedy_mismatch_emits_correction():
+    rng = np.random.default_rng(0)
+    # second proposal diverges: keep [7], emit the target's 2 instead
+    a, out = accept_tokens([7, 8, 9], _logits_for([7, 2, 9, 3]), 0.0, rng)
+    assert (a, out) == (1, [7, 2])
+    # immediate mismatch: pure correction, one token
+    a, out = accept_tokens([5], _logits_for([7, 1]), 0.0, rng)
+    assert (a, out) == (0, [7])
+
+
+def test_accept_rejection_certain_cases():
+    rng = np.random.default_rng(0)
+    v = 8
+    certain = np.full((2, v), -30.0, np.float32)
+    certain[:, 3] = 30.0                       # target: all mass on 3
+    # drafter proposed 3 with q(3)=1 → p(3)/q(3)=1 → always accepted,
+    # bonus sampled from row 1 (also certain on 3)
+    q = np.zeros(v); q[3] = 1.0
+    a, out = accept_tokens([3], certain, 1.0, rng, [q])
+    assert (a, out) == (1, [3, 3])
+    # drafter proposed 5 where p(5)≈0 → always rejected; the residual
+    # draw must come from p (token 3), never re-emit 5
+    q5 = np.zeros(v); q5[5] = 1.0
+    for _ in range(8):
+        a, out = accept_tokens([5], certain, 1.0, rng, [q5])
+        assert (a, out) == (0, [3])
+    # one-hot drafter without q_rows behaves the same
+    a, out = accept_tokens([5], certain, 1.0, rng, None)
+    assert (a, out) == (0, [3])
+
+
+def test_accept_rejection_preserves_target_distribution():
+    """Draft-then-accept/resample must be distributed exactly as the
+    target: empirical first-token frequencies match softmax(logits/T)."""
+    rng = np.random.default_rng(1)
+    v = 4
+    logits = np.array([[1.0, 0.5, -0.5, 0.0],
+                       [0.0, 0.0, 0.0, 0.0]], np.float32)
+    temp = 0.7
+    p = np.exp(logits[0] / temp); p /= p.sum()
+    q = np.array([0.55, 0.05, 0.3, 0.1])       # deliberately miscalibrated
+    counts = np.zeros(v)
+    trials = 6000
+    for _ in range(trials):
+        g = int(rng.choice(v, p=q))
+        _, out = accept_tokens([g], logits, temp, rng, [q])
+        counts[out[0]] += 1
+    np.testing.assert_allclose(counts / trials, p, atol=0.03)
+
+
+def test_ngram_lookup():
+    look = NgramDrafter._lookup
+    hist = [1, 2, 3, 9, 1, 2, 3]
+    assert look(hist, 3, 3) == [9, 1, 2]       # trigram [1,2,3] continues
+    assert look(hist, 8, 3) == [9, 1, 2, 3]    # capped by history end
+    assert look([1, 2, 3, 4], 4, 3) == []      # nothing repeats
+    # earliest occurrence wins (longest continuation ahead of it)
+    assert look([5, 1, 5, 2, 5], 2, 1) == [1, 5]
+    # a constant run proposes the full lookahead, not one token
+    assert look([7, 4, 4, 4, 4], 3, 3) == [4, 4, 4]
+    with pytest.raises(ValueError):
+        NgramDrafter(0)
+
+
+# ---------------------------------------------------------------------------
+# engine-level greedy parity (token-identical to non-speculative)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("drafter_kw", [
+    dict(drafter="ngram"),
+    pytest.param(dict(drafter="model"), marks=pytest.mark.slow),
+    pytest.param(dict(drafter="model", draft_layers=2),
+                 marks=pytest.mark.slow),
+])
+def test_spec_greedy_identical_dense(drafter_kw):
+    m, params = smoke_model()
+    base = mixed_requests()
+    Engine(m, params, DENSE, batch_size=2, max_seq=64, page_size=8,
+           prefill_chunk=4).run(base)
+    sp = mixed_requests()
+    eng = Engine(m, params, DENSE, batch_size=2, max_seq=64, page_size=8,
+                 prefill_chunk=4, spec_decode=SpecConfig(k=3, **drafter_kw))
+    eng.run(sp)
+    assert streams(sp) == streams(base)
+    assert eng.spec_rounds > 0 and eng.spec_emitted > 0
+    # the full-depth self-drafter proposes exactly the target argmax chain
+    if drafter_kw == dict(drafter="model"):
+        assert eng.acceptance_rate == 1.0
+        assert eng.tokens_per_verify > 2.0
+
+
+@pytest.mark.slow
+def test_spec_greedy_identical_lut_infer_target():
+    """lut_infer target with a same-point drafter, and the headline
+    LUT-DLA pairing: dense target verified while the coarse LUT path
+    drafts (same params, shared codebooks)."""
+    m, params, qc_i = lut_model()
+    for target_qc, spec in [
+        (qc_i, SpecConfig(k=3)),
+        (DENSE, SpecConfig(k=3, draft_qc=qc_i)),
+    ]:
+        base = mixed_requests()
+        Engine(m, params, target_qc, batch_size=2, max_seq=64, page_size=8,
+               prefill_chunk=4).run(base)
+        sp = mixed_requests()
+        eng = Engine(m, params, target_qc, batch_size=2, max_seq=64,
+                     page_size=8, prefill_chunk=4, spec_decode=spec)
+        eng.run(sp)
+        assert streams(sp) == streams(base)
+
+
+class WrongDrafter(Drafter):
+    """Adversarial drafter: proposes a constant (almost always wrong)
+    token so verify rejects nearly everything — the rollback stress case."""
+
+    def __init__(self, tok: int = 1):
+        self.tok = tok
+
+    def propose(self, engine, dslots, k_slot, k):
+        b = engine.num_slots
+        g = np.full((b, k), self.tok, np.int32)
+        n_prop = np.zeros((b,), np.int32)
+        for s in dslots:
+            n_prop[s.idx] = k_slot[s.idx]
+        return g, n_prop, None
+
+
+def spec_engine_with(drafter, m, params, qc=DENSE, **kw):
+    eng = Engine(m, params, qc, spec_decode=SpecConfig(k=3), **kw)
+    eng.drafter = drafter
+    drafter.bind(eng)
+    return eng
+
+
+def test_verify_reject_rollback_identical_stream():
+    """Verify-then-reject every round: the slot's decode output must stay
+    token-identical to a never-speculated slot (rejected rows are rolled
+    back, overwritten, never attended)."""
+    m, params = smoke_model()
+    base = mixed_requests()
+    Engine(m, params, DENSE, batch_size=2, max_seq=64, page_size=8,
+           prefill_chunk=4).run(base)
+    sp = mixed_requests()
+    eng = spec_engine_with(WrongDrafter(), m, params, batch_size=2,
+                           max_seq=64, page_size=8, prefill_chunk=4)
+    eng.run(sp)
+    assert streams(sp) == streams(base)
+    assert eng.spec_drafted > 0
+    assert eng.spec_accepted < eng.spec_drafted   # rejections happened
+
+
+# ---------------------------------------------------------------------------
+# rollback invariants (property-style: checked after every engine step)
+# ---------------------------------------------------------------------------
+
+def _refcounts_match_rows(pt: PageTable):
+    """Every physical page's refcount == number of slot rows mapping it.
+
+    Parked prefix-cache pages are mapped by no row and hold refcount 0;
+    any violation means a rollback leaked a page (count too high) or
+    decrefed a shared page below its mapped count (too low)."""
+    mapped = Counter(p for row in pt._slot_pages for p in row)
+    for p in range(pt.allocator.num_pages):
+        assert pt.allocator.refcount(p) == mapped.get(p, 0), \
+            f"page {p}: refcount {pt.allocator.refcount(p)} != " \
+            f"{mapped.get(p, 0)} mapping rows"
+
+
+@pytest.mark.parametrize("drafter_factory", [
+    WrongDrafter, NgramDrafter,
+    pytest.param(ModelDrafter, marks=pytest.mark.slow)])
+def test_rollback_never_corrupts_shared_page_refcounts(drafter_factory):
+    """Two slots share a prefix (read-shared pages) while both speculate;
+    after every step the refcount of EVERY page — shared prefix pages
+    included — must equal the rows mapping it, and the shared pages'
+    refcount must never drop below the pre-draft value while both slots
+    hold them."""
+    m, params = smoke_model()
+    system = [(5 * j) % 60 + 2 for j in range(16)]      # 2 full pages
+    eng = spec_engine_with(drafter_factory(), m, params, batch_size=2,
+                           max_seq=64, page_size=8, prefill_chunk=8)
+    warm = Request(tokens=system + [7], max_new_tokens=4)
+    eng.run([warm])                     # indexes the system-prompt pages
+    _refcounts_match_rows(eng.kv.table)
+
+    a = Request(tokens=system + [11, 12], max_new_tokens=16)
+    b = Request(tokens=system + [13, 14], max_new_tokens=16)
+    eng.submit(a)
+    eng.submit(b)
+    shared = [eng.kv.table.prefix.lookup(key) for key in
+              __import__("repro.serve.kv_cache", fromlist=["x"])
+              ._chunk_keys(system, 8)]
+    assert all(p is not None for p in shared)
+    seen_both_live = False
+    while eng.scheduler.has_work:
+        eng.step()
+        _refcounts_match_rows(eng.kv.table)
+        rcs = [eng.kv.table.allocator.refcount(p) for p in shared]
+        if all(rc == 2 for rc in rcs):
+            seen_both_live = True       # both slots map the shared pages
+    assert seen_both_live
+    assert a.done and b.done
+    assert len(a.out_tokens) == 16 and len(b.out_tokens) == 16
+    # shared pages survive (parked or mapped), ready for the next hit
+    assert all(eng.kv.table.prefix.is_registered(p) for p in shared)
+
+
+def test_spec_prefix_warm_start_identical():
+    """Prefix-cache warm start + speculation == cold non-speculative."""
+    m, params = smoke_model()
+    system = [(3 * j) % 50 + 2 for j in range(16)]
+
+    def reqs():
+        return [Request(tokens=system + [10 + i], max_new_tokens=10)
+                for i in range(3)]
+
+    base = reqs()
+    Engine(m, params, DENSE, batch_size=2, max_seq=64, page_size=8,
+           prefill_chunk=8, prefix_cache=False).run(base)
+    warm = reqs()
+    eng = Engine(m, params, DENSE, batch_size=2, max_seq=64, page_size=8,
+                 prefill_chunk=8, spec_decode=SpecConfig(k=3))
+    eng.run([warm[0]])                  # warms the index
+    eng.submit(warm[1])
+    eng.submit(warm[2])
+    eng.run_until_idle()
+    assert streams(warm) == streams(base)
+    assert eng.cached_tokens > 0        # the warm starts actually hit
+
+
+def test_trim_releases_only_tail_pages():
+    pt = PageTable(num_slots=2, max_seq=64, page_size=8, num_pages=8,
+                   prefix_cache=False)
+    pt.ensure(0, 40)                    # 5 pages
+    assert pt.live_pages == 5
+    assert pt.trim(0, 18) == 2          # keep ceil(18/8) = 3
+    assert pt.live_pages == 3 and pt.allocator.available == 5
+    assert (pt.table[0, :3] >= 0).all() and (pt.table[0, 3:] == -1).all()
+    assert pt.trim(0, 18) == 0          # idempotent
+    pt.ensure(0, 40)                    # freed pages are reusable
+    assert pt.live_pages == 5
+
+
+def test_spec_config_validation():
+    m_ssm = Model(get_smoke_config("mamba2-2.7b"))
+    params = m_ssm.init(KEY, DENSE)
+    with pytest.raises(ValueError, match="roll back"):
+        Engine(m_ssm, params, DENSE, batch_size=2, max_seq=32,
+               spec_decode=SpecConfig(k=2))
+    m, p = smoke_model()
+    with pytest.raises(ValueError, match="k must be"):
+        Engine(m, p, DENSE, batch_size=2, max_seq=32,
+               spec_decode=SpecConfig(k=0))
+    with pytest.raises(ValueError, match="unknown drafter"):
+        SpecConfig(drafter="oracle").build_drafter()
+    with pytest.raises(ValueError, match="draft_layers"):
+        Engine(m, p, DENSE, batch_size=2, max_seq=32,
+               spec_decode=SpecConfig(k=2, draft_layers=99))
+
+
+@pytest.mark.slow
+def test_spec_sharded_parity():
+    """Speculative decoding under a tensor-parallel mesh stays
+    token-identical to the single-device non-speculative engine (the
+    verify step and the fused draft scan compile with explicit
+    shardings)."""
+    from conftest import run_in_devices
+    run_in_devices("""
+import jax
+from repro.configs import get_smoke_config
+from repro.core.lut import DENSE
+from repro.launch.mesh import make_test_mesh
+from repro.models.model import Model
+from repro.serve import Engine, Request, SpecConfig
+
+cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0), DENSE)
+def reqs():
+    return [Request(tokens=[3, 4, 5, 6], max_new_tokens=12),
+            Request(tokens=[9, 8, 7], max_new_tokens=8)]
+kw = dict(batch_size=2, max_seq=64, page_size=8, prefill_chunk=4)
+base = reqs()
+Engine(m, params, DENSE, **kw).run(base)
+mesh = make_test_mesh((1, 4), ("data", "model"))
+for spec in [SpecConfig(k=3, drafter="ngram"),
+             SpecConfig(k=3, draft_layers=2)]:
+    sp = reqs()
+    Engine(m, params, DENSE, mesh=mesh, spec_decode=spec, **kw).run(sp)
+    assert [r.out_tokens for r in sp] == [r.out_tokens for r in base], spec
+print("sharded spec OK")
+""")
+
+
+# ---------------------------------------------------------------------------
+# satellites: shared sampling helper, occupancy-rich errors
+# ---------------------------------------------------------------------------
+
+def test_engines_share_sampling_helper(monkeypatch):
+    """Both engines must route sampling through ``_sample_tokens`` so
+    greedy/temperature semantics cannot drift between them."""
+    import repro.serve.engine as eng_mod
+    m, params = smoke_model()
+    cont = Engine(m, params, DENSE, batch_size=2, max_seq=32)
+    batch = BatchToCompletionEngine(m, params, DENSE, batch_size=2,
+                                    max_seq=32)
+    calls = []
+
+    def spy(key, logits, temps, slot_ids):
+        calls.append(list(slot_ids))
+        return _sample_tokens(key, logits, temps, slot_ids)
+
+    monkeypatch.setattr(eng_mod, "_sample_tokens", spy)
+    logits = jax.numpy.asarray(np.linspace(0, 1, 2 * 17).reshape(2, 17))
+    key = jax.random.PRNGKey(7)
+    cont.key = key
+    batch.key = key
+    t_cont = cont._sample(logits, None, range(2))
+    t_batch = batch._sample(logits, None)
+    assert len(calls) == 2
+    np.testing.assert_array_equal(np.asarray(t_cont), np.asarray(t_batch))
+    # temperature path: same key + same slot ids → identical draws
+    temps = jax.numpy.asarray(np.array([0.8, 0.0], np.float32))
+    cont.key = key
+    batch.key = key
+    np.testing.assert_array_equal(
+        np.asarray(cont._sample(logits, temps, range(2))),
+        np.asarray(batch._sample(logits, temps)))
+
+
+def test_pool_errors_and_preemption_log_carry_occupancy(caplog):
+    m, params = smoke_model()
+    eng = Engine(m, params, DENSE, batch_size=2, max_seq=64, page_size=8,
+                 num_pages=4, prefill_chunk=8)
+    with pytest.raises(PagePoolExhausted) as ei:
+        eng.submit(Request(tokens=list(range(40)), max_new_tokens=2))
+    msg = str(ei.value)
+    assert "live" in msg and "free of" in msg and "cached-parked" in msg
+    # preemption log: oversubscribe so decode must reclaim pages
+    reqs = [Request(tokens=list(range(2, 12)), max_new_tokens=14)
+            for _ in range(2)]
+    import logging
+    with caplog.at_level(logging.INFO, logger="repro.serve.scheduler"):
+        eng.run(reqs)
+    assert all(r.done for r in reqs)
+    pre = [r for r in caplog.records if "preempting slot" in r.getMessage()]
+    assert pre and "pool:" in pre[0].getMessage()
