@@ -1,6 +1,7 @@
-"""Shared benchmark utilities: timing + CSV row emission."""
+"""Shared benchmark utilities: timing, CSV row emission, JSON snapshots."""
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, List
 
@@ -13,6 +14,28 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
     print(row)
+
+
+def snapshot(path: str, **meta) -> dict:
+    """Write every row emitted so far (plus ``meta``) as a JSON snapshot.
+
+    The snapshot is the on-disk perf trajectory (ROADMAP item 5): commit
+    one per meaningful change and diff them to see regressions. Rows keep
+    the ``emit`` schema — name, metric value, free-form derived stats.
+    """
+    rows = []
+    for row in ROWS:
+        name, val, derived = row.split(",", 2)
+        rows.append({"name": name, "value": float(val), "derived": derived})
+    doc = {"date": time.strftime("%Y-%m-%d"),
+           "backend": jax.default_backend(),
+           "device_count": jax.device_count(),
+           **meta, "rows": rows}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[snapshot] {len(rows)} row(s) -> {path}")
+    return doc
 
 
 def time_jax(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

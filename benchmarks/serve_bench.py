@@ -40,6 +40,16 @@ drafter row (``draft_layers=1``) is reported unasserted: on this
 compute-bound CPU host its draft passes cost real FLOPs, so it hovers
 near 1.0x — the row exists to exercise the model-drafter path
 end-to-end and to report its acceptance.
+
+``--chaos`` adds the fault-tolerance rows: a 2-replica router replays the
+mixed workload under ``FaultSchedule.canned`` (pool squeeze + injected
+decode failure + replica crash mid-decode; docs/robustness.md), asserting
+zero lost requests and token-identical completed output, and reporting
+goodput (``--smoke`` asserts >= 90%).
+
+``--snapshot PATH`` (or ``auto``) writes every emitted row plus run
+metadata to a ``BENCH_serve.json`` perf snapshot — the on-disk trajectory
+for ROADMAP item 5.
 """
 from __future__ import annotations
 
@@ -53,13 +63,14 @@ import jax
 from repro.configs import get_smoke_config
 from repro.core.lut import DENSE
 from repro.models.model import Model
-from repro.serve import (BatchToCompletionEngine, Engine, Request,
-                         SpecConfig)
+from repro.serve import (BatchToCompletionEngine, Engine, FaultInjector,
+                         FaultSchedule, FinishReason, ReplicaHealth,
+                         ReplicaRouter, Request, SpecConfig)
 
 try:                                   # `python -m benchmarks.serve_bench`
-    from .common import emit
+    from .common import emit, snapshot
 except ImportError:                    # `python benchmarks/serve_bench.py`
-    from common import emit
+    from common import emit, snapshot
 
 
 def mixed_workload(n_requests: int, slots: int, prompt_len: int = 4,
@@ -207,8 +218,83 @@ def spec_bench(slots: int, n_requests: int, smoke: bool) -> float:
     return ratio
 
 
+def chaos_bench(slots: int, n_requests: int, max_seq: int,
+                smoke: bool) -> float:
+    """Fault-tolerant serving under the canned chaos schedule.
+
+    A 2-replica router replays the mixed workload while
+    ``FaultSchedule.canned`` squeezes replica 0's page pool dry, injects
+    a one-shot decode failure, then stalls and hard-crashes replica 1
+    mid-decode (docs/robustness.md). Asserted invariants: ZERO lost
+    requests (every request finishes with a reason — crash recovery
+    requeues the dead replica's in-flight work), and completed requests
+    are token-identical to a fault-free run. Returns goodput — the
+    fraction of requests that finished ``COMPLETED`` (not shed, not
+    deadline-expired); ``--smoke`` asserts >= 90%.
+    """
+    cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0), DENSE)
+
+    def mk_router():
+        return ReplicaRouter([Engine(model, params, DENSE, batch_size=slots,
+                                     max_seq=max_seq, page_size=16,
+                                     prefill_chunk=8) for _ in range(2)])
+
+    def workload():
+        # longs first: least-loaded dispatch then spreads them across both
+        # replicas, so the mid-decode crash of the last replica actually
+        # has in-flight work to recover (mixed_workload puts every long
+        # request at an even index, which round-robins them all onto
+        # replica 0 otherwise)
+        reqs = mixed_workload(n_requests, slots)
+        return sorted(reqs, key=lambda r: -r.max_new_tokens)
+
+    ref_reqs = workload()
+    mk_router().run(ref_reqs)               # fault-free reference output
+
+    router = mk_router()
+    router.run(mixed_workload(2 * slots, slots, long_new=3, short_new=2))
+    FaultInjector(FaultSchedule.canned(replicas=2)).attach(router)
+    reqs = workload()
+    t0 = time.perf_counter()
+    for r in reqs:
+        router.submit(r)
+    router.run_until_idle()
+    dt = time.perf_counter() - t0
+
+    lost = [r for r in reqs if not r.done]
+    assert not lost, f"chaos: {len(lost)} request(s) lost"
+    completed = [r for r in reqs
+                 if r.finish_reason is FinishReason.COMPLETED]
+    for got, want in zip(reqs, ref_reqs):
+        if got.finish_reason is FinishReason.COMPLETED:
+            assert got.out_tokens == want.out_tokens, \
+                "chaos: completed request diverged from fault-free run"
+    goodput = len(completed) / len(reqs)
+    toks = sum(len(r.out_tokens) for r in reqs)
+    dead = sum(st.health is ReplicaHealth.DEAD for st in router.status)
+    emit("serve.chaos.goodput_pct", goodput * 100.0,
+         f"completed={len(completed)}/{len(reqs)} "
+         f"retried={router.retried_requests} "
+         f"shed={sum(r.shed for r in reqs)} dead_replicas={dead}")
+    emit("serve.chaos.us_per_tok", dt / max(toks, 1) * 1e6,
+         f"tok/s={toks / dt:.1f} under faults")
+    print(f"chaos: {goodput * 100:.0f}% goodput, zero lost, completed "
+          f"output token-identical to fault-free run "
+          f"({router.retried_requests} recovery retries, {dead} replica(s) "
+          f"died)")
+    if smoke:
+        assert goodput >= 0.90, (
+            f"chaos goodput must stay >= 90% under the canned fault "
+            f"schedule, got {goodput * 100:.0f}%")
+        print("chaos smoke check OK (>= 90% goodput, zero lost)")
+    return goodput
+
+
 def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
-          sharded: bool = False, devices: int = 0, spec: bool = False):
+          sharded: bool = False, devices: int = 0, spec: bool = False,
+          chaos: bool = False):
     cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0), DENSE)
@@ -278,6 +364,9 @@ def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
     # speculative-decoding rows (trains its own small-vocab model)
     if spec:
         spec_bench(slots, n_requests, smoke)
+    # fault-injected rows (2-replica router under the canned schedule)
+    if chaos:
+        chaos_bench(slots, n_requests, max_seq, smoke)
     return ratio
 
 
@@ -295,6 +384,13 @@ def main():
                     help="add the speculative-decoding A/B rows (trains a "
                          "small-vocab smoke model first; with --smoke, "
                          "asserts >1.0x + token-identical output)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add fault-injected rows: a 2-replica router under "
+                         "the canned chaos schedule (with --smoke, asserts "
+                         "zero lost requests and >= 90%% goodput)")
+    ap.add_argument("--snapshot", default="",
+                    help="write a BENCH_serve.json perf snapshot to this "
+                         "path ('auto' = repo root)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=64)
@@ -315,7 +411,17 @@ def main():
                             f"{args.devices}").strip()
         os.execve(sys.executable, [sys.executable] + sys.argv, env)
     bench(args.slots, args.requests, args.max_seq, args.smoke, args.sharded,
-          args.devices, args.spec)
+          args.devices, args.spec, args.chaos)
+    if args.snapshot:
+        path = args.snapshot
+        if path == "auto":
+            path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "BENCH_serve.json")
+        snapshot(os.path.normpath(path), bench="serve",
+                 smoke=args.smoke, slots=args.slots,
+                 requests=args.requests, max_seq=args.max_seq,
+                 sharded=bool(args.sharded), spec=bool(args.spec),
+                 chaos=bool(args.chaos))
 
 
 if __name__ == "__main__":

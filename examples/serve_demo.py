@@ -16,8 +16,17 @@ deploy tables — and the report adds the measured acceptance rate and
 tokens per verify call. Output is token-identical to the plain dense
 pass (greedy acceptance).
 
-Run: PYTHONPATH=src python examples/serve_demo.py
+``--chaos`` replays a burstier trace — priorities, per-request deadlines,
+bounded queues — through a 2-replica router while ``FaultSchedule.canned``
+squeezes one replica's page pool, injects a decode failure and crashes
+the other replica mid-decode (docs/robustness.md). The report shows what
+production cares about under faults: completed / retried / shed counts,
+the deadline-miss rate, and per-replica health.
+
+Run: PYTHONPATH=src python examples/serve_demo.py [--chaos]
 """
+import argparse
+
 import numpy as np
 
 import jax
@@ -27,7 +36,8 @@ from repro.core import precompute_model
 from repro.core.lut import DENSE, QuantConfig
 from repro.data import SyntheticDataset
 from repro.models.model import Model
-from repro.serve import Engine, Request, SpecConfig
+from repro.serve import (Engine, FaultInjector, FaultSchedule, FinishReason,
+                         ReplicaRouter, Request, SpecConfig)
 from repro.train import TrainConfig, Trainer
 
 SLOTS = 4
@@ -84,13 +94,80 @@ def report(tag: str, reqs):
         print(f"  t={r.arrival:>3} prompt={r.tokens} -> {r.out_tokens}")
 
 
+def chaos_trace(rng: np.random.Generator, n_requests: int = 16):
+    """A burstier arrival trace with priorities and (some) deadlines."""
+    t = 0.0
+    trace = []
+    for i in range(n_requests):
+        t += rng.exponential(1.0)
+        prompt = [int(x) for x in (5 * i + np.arange(3)) % 200 + 2]
+        max_new = int(rng.integers(4, 16))
+        # every third request carries an SLO; the rest can wait
+        deadline = int(rng.integers(10, 40)) if i % 3 == 0 else None
+        trace.append((int(t), prompt, max_new, i % 2, deadline))
+    return trace
+
+
+def chaos_demo(model, params) -> None:
+    """Serve the bursty trace through 2 replicas under the canned faults."""
+    print("\n=== chaos: canned fault schedule over a 2-replica router ===")
+    router = ReplicaRouter(
+        [Engine(model, params, DENSE, batch_size=SLOTS, max_seq=96,
+                page_size=16, prefill_chunk=16, max_queue=4)
+         for _ in range(2)])
+    inj = FaultInjector(FaultSchedule.canned(replicas=2)).attach(router)
+    pending = chaos_trace(np.random.default_rng(1))
+    reqs = []
+    while pending or router.has_work:
+        while pending and pending[0][0] <= router.step_count:
+            _, prompt, max_new, prio, deadline = pending.pop(0)
+            req = Request(tokens=prompt, max_new_tokens=max_new,
+                          priority=prio, deadline_steps=deadline)
+            reqs.append(req)
+            router.submit(req)      # sheds cleanly if every queue is full
+        router.step()
+
+    assert all(r.done for r in reqs), "chaos demo lost requests"
+    by_reason = {}
+    for r in reqs:
+        by_reason[r.finish_reason.name] = \
+            by_reason.get(r.finish_reason.name, 0) + 1
+    slo = [r for r in reqs if r.deadline_steps is not None]
+    missed = sum(r.finish_reason is FinishReason.DEADLINE for r in slo)
+    print(f"[chaos] {len(reqs)} requests -> "
+          + ", ".join(f"{v} {k.lower()}"
+                      for k, v in sorted(by_reason.items())))
+    print(f"  recovery retries: {router.retried_requests} "
+          f"(requests with retries>0: "
+          f"{sum(r.retries > 0 for r in reqs)})")
+    print(f"  deadline-miss rate: {missed}/{len(slo)} of SLO'd requests "
+          f"({100.0 * missed / max(len(slo), 1):.0f}%)")
+    for i, rep in enumerate(router.stats()["replicas"]):
+        print(f"  replica {i}: {rep['health']}"
+              + (f" ({rep['death_reason']})" if rep["death_reason"] else "")
+              + f", {rep['recovered_requests']} requests recovered")
+    fired = inj.report()["by_kind"]
+    print(f"  faults fired: {fired}")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--chaos", action="store_true",
+                    help="serve a bursty SLO'd trace through 2 replicas "
+                         "under the canned fault schedule and report "
+                         "completed/retried/shed counts + deadline misses")
+    args = ap.parse_args()
+
     cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
     model = Model(cfg)
     ds = SyntheticDataset(cfg, global_batch=16, seq_len=64)
     params = model.init(jax.random.PRNGKey(0), DENSE)
     tc = TrainConfig(total_steps=150, lr=3e-3, warmup=10, log_every=50)
     params, _, _ = Trainer(model, ds, DENSE, tc).run(params)
+
+    if args.chaos:
+        chaos_demo(model, params)
+        return
 
     qi = QuantConfig(mode="lut_infer", v=4, c=16, lut_dtype="int8",
                      impl="ref")

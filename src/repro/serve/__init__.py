@@ -4,32 +4,49 @@ Public surface:
   * :class:`Engine` — slot-scheduled continuous batching (the default);
     pass ``mesh=`` for tensor-parallel serving over a device mesh.
   * :class:`ReplicaRouter` — data-parallel dispatch across engine
-    replicas (``from_mesh`` carves a (data, model) mesh into TP groups).
+    replicas (``from_mesh`` carves a (data, model) mesh into TP groups),
+    with per-replica health tracking (:class:`ReplicaHealth`), a step
+    watchdog, graceful drain, and crash recovery.
   * :class:`BatchToCompletionEngine` — legacy fixed-batch baseline.
-  * :class:`Request` — one generation request.
+  * :class:`Request` — one generation request (``priority``,
+    ``deadline_steps``, ``finish_reason``: :class:`FinishReason`).
   * :class:`PagedKVCache` / :class:`PageAllocator` /
     :class:`PagePoolExhausted` — the paged cache memory system, with
     ref-counted pages and automatic shared-prefix reuse
     (:class:`PrefixCache` / :class:`PrefixMatch`).
-  * :class:`SlotScheduler` — admission / eviction / preemption policy.
+  * :class:`SlotScheduler` — admission / eviction / preemption policy,
+    priority-ordered bounded queue, deadline expiry, load shedding.
+  * :class:`DegradationPolicy` — pressure-driven degradation ladder
+    (spec off → prefill shrink → admission stop, with hysteresis).
+  * :class:`FaultSchedule` / :class:`FaultInjector` — deterministic
+    fault injection (crashes, step errors, pool squeezes) for chaos
+    tests and ``serve_bench --chaos``.
 
 See docs/serving.md for the engine lifecycle, cache layout, prefix
 caching, and the sharded-serving mesh recipes; docs/speculative.md for
 the self-speculative draft/verify/rollback loop
-(``Engine(spec_decode=SpecConfig(...))``).
+(``Engine(spec_decode=SpecConfig(...))``); docs/robustness.md for the
+fault-tolerance layer (health states, degradation, fault cookbook).
 """
-from .engine import BatchToCompletionEngine, Engine, greedy_generate
+from .engine import (BatchToCompletionEngine, DegradationPolicy, Engine,
+                     MODE_NO_SPEC, MODE_NORMAL, MODE_SHRINK_PREFILL,
+                     MODE_STOP_ADMIT, greedy_generate)
+from .faults import Fault, FaultInjector, FaultSchedule, ReplicaCrashed
 from .kv_cache import (PageAllocator, PagePoolExhausted, PagedKVCache,
                        PageTable, PrefixCache, PrefixMatch)
-from .router import ReplicaRouter
-from .scheduler import Request, Slot, SlotPhase, SlotScheduler
+from .router import ReplicaHealth, ReplicaRouter, ReplicaStatus
+from .scheduler import (FinishReason, LoadShedded, Request, Slot, SlotPhase,
+                        SlotScheduler)
 from .speculative import (Drafter, ModelDrafter, NgramDrafter, SpecConfig,
                           accept_tokens)
 
 __all__ = [
-    "BatchToCompletionEngine", "Drafter", "Engine", "greedy_generate",
-    "ModelDrafter", "NgramDrafter", "PageAllocator", "PagePoolExhausted",
-    "PagedKVCache", "PageTable", "PrefixCache", "PrefixMatch",
-    "ReplicaRouter", "Request", "Slot", "SlotPhase", "SlotScheduler",
-    "SpecConfig", "accept_tokens",
+    "BatchToCompletionEngine", "DegradationPolicy", "Drafter", "Engine",
+    "Fault", "FaultInjector", "FaultSchedule", "FinishReason",
+    "LoadShedded", "MODE_NORMAL", "MODE_NO_SPEC", "MODE_SHRINK_PREFILL",
+    "MODE_STOP_ADMIT", "ModelDrafter", "NgramDrafter", "PageAllocator",
+    "PagePoolExhausted", "PagedKVCache", "PageTable", "PrefixCache",
+    "PrefixMatch", "ReplicaCrashed", "ReplicaHealth", "ReplicaRouter",
+    "ReplicaStatus", "Request", "Slot", "SlotPhase", "SlotScheduler",
+    "SpecConfig", "accept_tokens", "greedy_generate",
 ]

@@ -43,7 +43,9 @@ path) instead of dense GEMMs — precomputed tables must already be in
 from __future__ import annotations
 
 import contextlib
-from typing import List, Optional, Sequence
+import dataclasses
+import logging
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -52,8 +54,62 @@ import numpy as np
 from repro.core.lut import DENSE, QuantConfig
 
 from .kv_cache import PagedKVCache, PagePoolExhausted
-from .scheduler import Request, SlotPhase, SlotScheduler
+from .scheduler import FinishReason, Request, SlotPhase, SlotScheduler
 from .speculative import SpecConfig, accept_tokens
+
+log = logging.getLogger(__name__)
+
+# Degradation ladder (docs/robustness.md): each mode sheds work the
+# engine can live without, in order of how cheap the capability is to
+# lose. Pressure is pool occupancy (PagedKVCache.pressure).
+MODE_NORMAL = 0          # full speculative lookahead, full prefill budget
+MODE_NO_SPEC = 1         # speculative lookahead off (spec pages freed)
+MODE_SHRINK_PREFILL = 2  # prefill chunk budget cut (decode keeps priority)
+MODE_STOP_ADMIT = 3      # no new admissions until pressure clears
+MODE_NAMES = ("normal", "no_spec", "shrink_prefill", "stop_admit")
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationPolicy:
+    """Pressure thresholds for the engine's degradation ladder.
+
+    Escalation is immediate: the mode jumps to however many thresholds
+    the current pressure crosses. De-escalation is hysteretic: a mode is
+    only re-enabled once pressure drops ``hysteresis`` BELOW the
+    threshold that disabled it, so the engine cannot flap between modes
+    at a threshold boundary. ``mode_for`` is monotone in pressure for a
+    fixed current mode (property-tested in tests/test_faults.py).
+
+    Attributes:
+      spec_off: at/above this pressure, speculative lookahead is disabled
+        (draft pages are pure opportunism — first thing to go).
+      chunk_shrink: at/above, the prefill chunk budget is divided by
+        ``chunk_divisor`` (floor ``min_chunk``) — decode drains pages,
+        prefill only adds them.
+      admit_stop: at/above, admission stops entirely (waiting requests
+        stay queued; the bounded queue sheds overflow by priority).
+      hysteresis: re-enable margin below each threshold.
+    """
+    spec_off: float = 0.80
+    chunk_shrink: float = 0.90
+    admit_stop: float = 0.97
+    hysteresis: float = 0.10
+    chunk_divisor: int = 4
+    min_chunk: int = 2
+
+    def __post_init__(self):
+        t = (self.spec_off, self.chunk_shrink, self.admit_stop)
+        if not (0.0 < t[0] <= t[1] <= t[2] <= 1.0):
+            raise ValueError(f"thresholds must satisfy 0 < spec_off <= "
+                             f"chunk_shrink <= admit_stop <= 1, got {t}")
+
+    def mode_for(self, pressure: float, current: int) -> int:
+        """Next degradation mode given the pool pressure and the mode the
+        engine is currently in (hysteresis needs the history)."""
+        thresholds = (self.spec_off, self.chunk_shrink, self.admit_stop)
+        up = sum(pressure >= t for t in thresholds)
+        down = sum(pressure > t - self.hysteresis for t in thresholds)
+        return max(up, min(current, down))
 
 
 def _i32(x) -> jax.Array:
@@ -131,6 +187,16 @@ class Engine:
         non-speculative decoding; temperature mode applies rejection
         sampling with the residual correction. Attention (paged KV)
         families only — recurrent state cannot roll back.
+      max_queue: optional bound on the waiting queue. A ``submit`` that
+        would overflow it sheds the lowest-priority (newest) request
+        with a clean ``finish_reason = LoadShedded`` result instead of
+        raising — admission control for burst traffic
+        (docs/robustness.md). ``None`` = unbounded.
+      degradation: :class:`DegradationPolicy` stepping the engine down
+        a ladder of modes as pool pressure rises — speculative
+        lookahead off, then a shrunken prefill budget, then an admission
+        stop — and back up (with hysteresis) as pressure clears. Pass
+        ``None`` to disable (the pre-fault-tolerance behaviour).
       mesh: optional ``jax.sharding.Mesh`` (``launch.mesh``) with a
         ``model`` axis. When given, the engine serves TENSOR-PARALLEL over
         the mesh: params are placed by ``parallel.sharding.param_pspecs``
@@ -150,7 +216,10 @@ class Engine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: int = 32, mesh=None,
                  prefix_cache: bool = True,
-                 spec_decode: Optional[SpecConfig] = None):
+                 spec_decode: Optional[SpecConfig] = None,
+                 max_queue: Optional[int] = None,
+                 degradation: Optional[DegradationPolicy]
+                 = DegradationPolicy()):
         self.model = model
         self.params = params
         self.qc = qc
@@ -167,8 +236,15 @@ class Engine:
         self.kv = PagedKVCache(model, self.num_slots, max_seq,
                                page_size=page_size, num_pages=num_pages,
                                prefix_cache=prefix_cache)
-        self.scheduler = SlotScheduler(self.num_slots)
+        self.scheduler = SlotScheduler(self.num_slots, max_queue=max_queue)
         self.step_count = 0
+        # Degradation ladder state (docs/robustness.md): mode 0..3, step
+        # counts per mode for the stats surface, and a monotone count of
+        # emitted tokens — the router watchdog's progress marker.
+        self.degradation = degradation
+        self.mode = MODE_NORMAL
+        self.mode_steps: Dict[int, int] = {m: 0 for m in range(4)}
+        self.emitted_tokens = 0
         # Prefix-cache accounting (docs/serving.md §Prefix caching):
         #   prompt_tokens     — prompt tokens admitted (incl. re-admissions)
         #   cached_tokens     — of those, served from shared pages
@@ -328,7 +404,7 @@ class Engine:
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> Optional[Request]:
         """Enqueue a request; it is admitted as soon as a slot + pages free.
 
         Raises :class:`PagePoolExhausted` immediately (before the request
@@ -336,9 +412,32 @@ class Engine:
         oversized request cannot abort a run with valid requests in
         flight. A request whose *generation* outgrows an undersized page
         pool later is finished as truncated, not errored (see
-        :meth:`_decode_step`)."""
-        self.kv.check_admissible(len(req.tokens))
-        self.scheduler.submit(req)
+        :meth:`_decode_step`).
+
+        With a bounded queue (``max_queue``), overflow sheds the
+        lowest-priority request with ``finish_reason = LoadShedded`` —
+        returned here (possibly ``req`` itself) so callers can observe
+        the drop; ``None`` when nothing was shed. ``arrival`` is stamped
+        with the current engine step when unset (the deadline clock)."""
+        # a recovered / re-submitted request's generated tokens are part
+        # of the prompt it will re-prefill with — account for them
+        self.kv.check_admissible(len(req.tokens) + len(req.out_tokens))
+        if req.arrival is None:
+            req.arrival = self.step_count
+        victim = self.scheduler.submit(req)
+        if victim is not None and victim.finish_step is None:
+            victim.finish_step = self.step_count
+        return victim
+
+    def requeue(self, req: Request) -> None:
+        """Re-admit a request the system already accepted (crash recovery
+        from another replica): exempt from the queue bound — rescuing a
+        request must never shed it — and placed at the queue front. The
+        caller accounts the retry (the router does, for its backoff)."""
+        self.kv.check_admissible(len(req.tokens) + len(req.out_tokens))
+        if req.arrival is None:
+            req.arrival = self.step_count
+        self.scheduler.requeue(req, front=True, count_retry=False)
 
     def run(self, requests: List[Request]) -> List[Request]:
         """Serve all requests to completion (continuous batching)."""
@@ -347,30 +446,82 @@ class Engine:
         self.run_until_idle()
         return requests
 
+    # Steps tolerated with work pending but nothing progressing before
+    # run_until_idle errors out. Non-zero because transiently-held pages
+    # (fault injection / an external pool holder) legitimately stall the
+    # engine; bounded so a genuine livelock still fails loudly.
+    STALL_LIMIT = 512
+
     def run_until_idle(self) -> None:
         """Step until queue and slots are empty."""
+        stalled = 0
         while self.scheduler.has_work:
-            if not self.step():
-                raise RuntimeError("engine made no progress")  # unreachable
+            if self.step():
+                stalled = 0
+            else:
+                stalled += 1
+                if stalled > self.STALL_LIMIT:
+                    raise RuntimeError(
+                        f"engine made no progress in {stalled} steps "
+                        f"({self.kv.occupancy()})")
+
+    @property
+    def pressure(self) -> float:
+        """Current page-pool pressure in [0, 1] (see PagedKVCache)."""
+        return self.kv.pressure
+
+    @property
+    def progress_marker(self):
+        """Monotone work counter — the router watchdog compares this
+        between steps to detect a stalled (alive but useless) replica."""
+        return self.prefilled_tokens + self.emitted_tokens
+
+    def _update_degradation(self) -> None:
+        """Advance the degradation ladder from the current pressure."""
+        if self.degradation is None:
+            return
+        new = self.degradation.mode_for(self.pressure, self.mode)
+        if new != self.mode:
+            log.info("degradation %s -> %s (pressure %.2f, %s)",
+                     MODE_NAMES[self.mode], MODE_NAMES[new],
+                     self.pressure, self.kv.occupancy())
+        self.mode = new
 
     def step(self) -> bool:
         """One engine iteration: admit, one prefill chunk, one decode step.
 
         Running at most one prefill chunk per iteration bounds the decode
         stall any prompt can cause to ``prefill_chunk`` tokens of work.
+        Under pressure the degradation ladder sheds work first: mode 1
+        drops speculative lookahead, mode 2 shrinks the prefill budget,
+        mode 3 stops admitting (docs/robustness.md).
         Returns False when there was nothing to do.
         """
-        for slot in self.scheduler.admit(self.kv):
-            self._set_slot_temp(slot.idx, slot.req.temperature)
-            self.prompt_tokens += slot.prefill_len
-            self.cached_tokens += slot.pos    # admission set pos = matched
+        self._update_degradation()
+        self.mode_steps[self.mode] += 1
+        for req in self.scheduler.expire_deadlines(self.step_count, self.kv):
+            log.info("request expired past deadline_steps=%s",
+                     req.deadline_steps)
+        for s in self.scheduler.slots:       # expiry may have freed lanes
+            if s.free:
+                self._set_slot_temp(s.idx, 0.0)
+        # Admission stops at the top of the ladder — but never on an idle
+        # engine (nothing running = nothing will release pages, so waiting
+        # would deadlock; pressure on an idle pool is ~0 anyway unless
+        # pages are held externally, and then admit() simply waits).
+        if (self.mode < MODE_STOP_ADMIT
+                or not self.scheduler.occupied_slots()):
+            for slot in self.scheduler.admit(self.kv):
+                self._set_slot_temp(slot.idx, slot.req.temperature)
+                self.prompt_tokens += slot.prefill_len
+                self.cached_tokens += slot.pos  # admission set pos = matched
         progressed = False
         slot = self.scheduler.next_prefill()
         if slot is not None:
             self._prefill_chunk_step(slot)
             progressed = True
         if self.scheduler.decode_slots():
-            if self.spec is not None:
+            if self.spec is not None and self.mode < MODE_NO_SPEC:
                 self._spec_decode_step()
             else:
                 self._decode_step()
@@ -411,9 +562,21 @@ class Engine:
                     raise
                 self._set_slot_temp(victim.idx, 0.0)
 
+    @property
+    def prefill_budget(self) -> int:
+        """Prompt tokens fed per prefill chunk — the full static chunk
+        width normally; divided by the policy's ``chunk_divisor`` in
+        degradation mode >= 2 (the compiled chunk SHAPE never changes,
+        only how much of it carries real tokens, so no recompilation)."""
+        if self.degradation is None or self.mode < MODE_SHRINK_PREFILL:
+            return self.prefill_chunk
+        return max(self.degradation.min_chunk,
+                   self.prefill_chunk // self.degradation.chunk_divisor)
+
     def _prefill_chunk_step(self, slot) -> None:
-        c = self.prefill_chunk
-        chunk = self.scheduler.prompt_chunk(slot, c)
+        c = self.prefill_chunk           # static compiled width, never shrunk
+        chunk = self.scheduler.prompt_chunk(
+            slot, min(c, self.prefill_budget))
         valid = len(chunk)
         # prompt pages were committed in full by SlotScheduler.admit() —
         # only decode grows a slot page-by-page
@@ -438,23 +601,32 @@ class Engine:
         self.scheduler.finish_prefill(slot, tok)
         self._record_token(slot, tok)
 
+    def _grow_or_shed(self, s) -> None:
+        """Reserve the page covering slot ``s``'s next write position,
+        preempting neighbours if needed. When even that fails: an
+        undersized pool that can NEVER hold the sequence finishes the
+        request as truncated (the last sampled token is already in
+        out_tokens and needs no cache write); a pool that could hold it
+        but whose pages are transiently held elsewhere (fault injection /
+        an external holder) preempts the slot itself — the request
+        requeues and resumes token-identically once pages return."""
+        try:
+            self._ensure_pages(s.idx, s.pos + 1)
+        except PagePoolExhausted:
+            if self.kv.pages_for(s.pos + 1) > \
+                    self.kv.table.allocator.num_pages:
+                s.req.finish(FinishReason.TRUNCATED, self.step_count)
+                self._evict(s)
+            else:
+                self.scheduler.preempt(s, self.kv)
+                self._set_slot_temp(s.idx, 0.0)
+
     def _decode_step(self) -> None:
         for s in list(self.scheduler.decode_slots()):
             if s.phase is not SlotPhase.DECODE:
                 continue          # preempted by an earlier ensure this loop
-            try:
-                # the page covering the write position must exist up front
-                self._ensure_pages(s.idx, s.pos + 1)
-            except PagePoolExhausted:
-                # no preemptable neighbour holds pages, so the pool can
-                # NEVER supply this sequence's next page (an undersized
-                # pool, not transient pressure): finish the request as
-                # truncated instead of aborting the whole run. The last
-                # sampled token is already in out_tokens and needs no
-                # cache write.
-                s.req.done = True
-                s.req.finish_step = self.step_count
-                self._evict(s)
+            # the page covering the write position must exist up front
+            self._grow_or_shed(s)
         dslots = self.scheduler.decode_slots()  # preemption may have culled
         if not dslots:
             return
@@ -509,17 +681,12 @@ class Engine:
         the rejected lookahead no longer needs.
         """
         # page for the committed pending token: same rules as _decode_step
-        # (preemption allowed; truncate-finish when the pool can never
-        # supply it)
+        # (preemption allowed; truncate-finish only when the pool can
+        # never supply it, self-preempt when pages are transiently held)
         for s in list(self.scheduler.decode_slots()):
             if s.phase is not SlotPhase.DECODE:
                 continue
-            try:
-                self._ensure_pages(s.idx, s.pos + 1)
-            except PagePoolExhausted:
-                s.req.done = True
-                s.req.finish_step = self.step_count
-                self._evict(s)
+            self._grow_or_shed(s)
         dslots = self.scheduler.decode_slots()
         if not dslots:
             return
@@ -597,6 +764,7 @@ class Engine:
         """Append a sampled token and apply the eviction rules."""
         req = slot.req
         req.out_tokens.append(tok)
+        self.emitted_tokens += 1
         if req.first_token_step is None:
             req.first_token_step = self.step_count
         slot.next_token = tok
@@ -604,8 +772,8 @@ class Engine:
         budget_done = len(req.out_tokens) >= req.max_new_tokens
         truncated = slot.pos >= self.max_seq      # no room for another write
         if hit_eos or budget_done or truncated:
-            req.done = True
-            req.finish_step = self.step_count
+            req.finish(FinishReason.COMPLETED if (hit_eos or budget_done)
+                       else FinishReason.TRUNCATED, self.step_count)
             self._evict(slot)
 
 
@@ -708,8 +876,7 @@ class BatchToCompletionEngine:
                         r.first_token_step = self.step_count
                     if (self.eos_id is not None and t == self.eos_id) or \
                             len(r.out_tokens) >= r.max_new_tokens:
-                        r.done = True
-                        r.finish_step = self.step_count
+                        r.finish(FinishReason.COMPLETED, self.step_count)
                         active[j] = False
             if not active[:b].any():
                 break
@@ -721,9 +888,8 @@ class BatchToCompletionEngine:
             self.step_count += 1
             next_tok = self._sample(logits, temps)
         for r in reqs:
-            r.done = True
-            if r.finish_step is None:       # truncated at max_seq: stamp
-                r.finish_step = self.step_count
+            # anything still unfinished was truncated at max_seq: stamp
+            r.finish(FinishReason.TRUNCATED, self.step_count)
 
 
 def greedy_generate(model, params, prompt_tokens, n_new: int,

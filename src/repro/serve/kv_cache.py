@@ -298,6 +298,16 @@ class PageTable:
         extra = self.prefix.reclaimable if self.prefix is not None else 0
         return self.allocator.available + extra
 
+    @property
+    def pressure(self) -> float:
+        """Pool pressure in ``[0, 1]``: the fraction of physical pages
+        that could NOT be handed to a new allocation right now (live
+        slot-referenced pages; parked prefix pages are reclaimable on
+        demand and count as capacity). 1.0 = the pool cannot grow any
+        sequence without preempting. The engine's degradation ladder
+        (docs/robustness.md) steps on this signal."""
+        return 1.0 - self.available_pages / self.allocator.num_pages
+
     def occupancy(self) -> str:
         """One-line pool accounting for capacity-error messages and
         preemption logs: live (slot-referenced), cached-parked (prefix
@@ -621,6 +631,14 @@ class PagedKVCache:
     def occupancy(self) -> str:
         return self.table.occupancy() if self.paged else \
             f"slot-dense cache ({self.num_slots} slots)"
+
+    @property
+    def pressure(self) -> float:
+        """Pool pressure in ``[0, 1]`` (see :meth:`PageTable.pressure`).
+        Non-paged families (ssm / hybrid recurrent state) hold O(1)
+        state per slot — capacity pressure is a slot-count question the
+        scheduler already answers, so they report 0.0 here."""
+        return self.table.pressure if self.paged else 0.0
 
     # -- prefix caching -----------------------------------------------------
     def match_prefix(self, tokens) -> PrefixMatch:

@@ -80,6 +80,11 @@ class SpecConfig:
         first N layers and read logits through the shared final norm +
         head. ``None`` = full depth.
       ngram: max suffix length the ngram drafter matches on.
+
+    Speculation is the first capability the engine sheds under page-pool
+    pressure: at/above ``DegradationPolicy.spec_off`` the engine decodes
+    one token at a time (no lookahead pages reserved) until pressure
+    drops back below the hysteresis margin — see docs/robustness.md.
     """
     k: int = 4
     drafter: str = "model"

@@ -1,0 +1,373 @@
+"""Fault tolerance: deadlines, shedding, degradation, chaos harness.
+
+The device tests here are the acceptance gate for the serving stack's
+robustness layer: a deterministic chaos schedule (replica crash
+mid-decode + forced pool exhaustion + injected step failure) must
+complete every non-shed greedy request token-identically to a
+fault-free run, and shed overflow must come back as clean
+``FinishReason.LOAD_SHED`` results, never exceptions.
+"""
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.lut import DENSE
+from repro.models.model import Model
+from repro.serve import (DegradationPolicy, Engine, Fault, FaultInjector,
+                         FaultSchedule, FinishReason, MODE_NO_SPEC,
+                         MODE_NORMAL, MODE_SHRINK_PREFILL, MODE_STOP_ADMIT,
+                         PagePoolExhausted, ReplicaHealth, ReplicaRouter,
+                         Request, SlotScheduler)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# host-side: schedule validation, degradation policy, bounded queue
+# ---------------------------------------------------------------------------
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(step=1, kind="meteor")
+    with pytest.raises(ValueError, match="step must be >= 1"):
+        Fault(step=0, kind="crash")
+    with pytest.raises(ValueError, match="duration"):
+        Fault(step=1, kind="slow", duration=0)
+    f = Fault(step=3, kind="slow", duration=2)
+    assert [f.active(c) for c in range(1, 7)] == [
+        False, False, True, True, False, False]
+    crash = Fault(step=3, kind="crash")
+    assert [crash.active(c) for c in (2, 3, 99)] == [False, True, True]
+
+
+def test_fault_schedule_random_is_deterministic():
+    a = FaultSchedule.random(7, replicas=3, n_faults=8)
+    b = FaultSchedule.random(7, replicas=3, n_faults=8)
+    assert a.faults == b.faults
+    assert a.faults != FaultSchedule.random(8, replicas=3, n_faults=8).faults
+    # crash budget respected so a fuzzed schedule can't kill every replica
+    assert sum(f.kind == "crash" for f in a.faults) <= 1
+    assert all(f.replica < 3 for f in a.faults)
+
+
+def test_degradation_mode_monotone_in_pressure():
+    p = DegradationPolicy()
+    for current in range(4):
+        modes = [p.mode_for(x / 1000.0, current) for x in range(1001)]
+        assert all(a <= b for a, b in zip(modes, modes[1:]))
+        assert set(modes) <= {0, 1, 2, 3}
+    # escalation crosses each rung exactly at its threshold, in order:
+    # spec off -> prefill shrink -> admission stop
+    assert p.mode_for(0.79, MODE_NORMAL) == MODE_NORMAL
+    assert p.mode_for(0.80, MODE_NORMAL) == MODE_NO_SPEC
+    assert p.mode_for(0.90, MODE_NORMAL) == MODE_SHRINK_PREFILL
+    assert p.mode_for(0.97, MODE_NORMAL) == MODE_STOP_ADMIT
+
+
+def test_degradation_hysteresis():
+    p = DegradationPolicy()     # thresholds .80/.90/.97, hysteresis .10
+    # each rung re-enables only once pressure drops `hysteresis` BELOW
+    # the threshold that engaged it — no flapping at the boundary
+    assert p.mode_for(0.80, MODE_NO_SPEC) == MODE_NO_SPEC
+    assert p.mode_for(0.75, MODE_NO_SPEC) == MODE_NO_SPEC
+    assert p.mode_for(0.699, MODE_NO_SPEC) == MODE_NORMAL
+    assert p.mode_for(0.88, MODE_STOP_ADMIT) == MODE_STOP_ADMIT
+    assert p.mode_for(0.869, MODE_STOP_ADMIT) == MODE_SHRINK_PREFILL
+    assert p.mode_for(0.5, MODE_STOP_ADMIT) == MODE_NORMAL
+    with pytest.raises(ValueError, match="thresholds"):
+        DegradationPolicy(spec_off=0.9, chunk_shrink=0.8)
+
+
+def test_bounded_queue_sheds_lowest_priority_newest_first():
+    sched = SlotScheduler(2, max_queue=2)
+    reqs = [Request(tokens=[i], priority=pr)
+            for i, pr in enumerate([0, 1, 2, 3, 0, 5])]
+    victims = [sched.submit(r) for r in reqs]
+    # r0/r1 fill the queue; each later submit sheds the lowest-priority
+    # (ties: newest) of queue+newcomer — r4 is shed on arrival
+    assert victims[:2] == [None, None]
+    assert [v is reqs[i] for v, i in zip(victims[2:], (0, 1, 4, 2))] == \
+        [True] * 4
+    assert [r.shed for r in reqs] == [True, True, True, False, True, False]
+    assert all(r.done and r.finish_reason is FinishReason.LOAD_SHED
+               for r in reqs if r.shed)
+    assert sched.shed_count == 4
+    assert [r.tokens for r in sched.waiting] == [[5], [3]]  # priority order
+
+
+def test_requeue_is_exempt_from_queue_bound():
+    sched = SlotScheduler(1, max_queue=1)
+    sched.submit(Request(tokens=[1]))
+    preempted = Request(tokens=[2])
+    sched.requeue(preempted)            # over the bound, but never shed
+    assert len(sched.waiting) == 2
+    assert sched.waiting[0] is preempted and preempted.retries == 1
+    assert sched.shed_count == 0
+
+
+# ---------------------------------------------------------------------------
+# device tests (smoke model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+    m = Model(cfg)
+    return m, m.init(KEY, DENSE)
+
+
+def _mk_engine(m, params, slots=2, **kw):
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 4)
+    return Engine(m, params, DENSE, batch_size=slots, **kw)
+
+
+def _mk_router(m, params, replicas=2, router_kw=None, **kw):
+    return ReplicaRouter([_mk_engine(m, params, **kw)
+                          for _ in range(replicas)], **(router_kw or {}))
+
+
+def test_deadline_evicts_slot_but_keeps_partial_output(qwen):
+    m, params = qwen
+    eng = _mk_engine(m, params)
+    slow = Request(tokens=[2, 3], max_new_tokens=20)
+    dl = Request(tokens=[4, 5], max_new_tokens=20, deadline_steps=4)
+    eng.submit(slow)
+    eng.submit(dl)
+    eng.run_until_idle()
+    assert dl.done and dl.finish_reason is FinishReason.DEADLINE
+    assert 1 <= len(dl.out_tokens) < 20      # partial output survives
+    assert slow.done and len(slow.out_tokens) == 20  # neighbour unharmed
+    assert eng.scheduler.expired_count == 1
+    assert eng.kv.live_pages == 0
+
+
+def test_deadline_expires_queued_request_without_a_slot(qwen):
+    m, params = qwen
+    eng = _mk_engine(m, params)
+    hogs = [Request(tokens=[i + 2, i + 3], max_new_tokens=12)
+            for i in range(2)]
+    dl = Request(tokens=[9, 9], max_new_tokens=4, deadline_steps=2)
+    for r in hogs + [dl]:
+        eng.submit(r)
+    eng.run_until_idle()
+    assert dl.done and dl.finish_reason is FinishReason.DEADLINE
+    assert dl.out_tokens == []
+    assert all(len(r.out_tokens) == 12 for r in hogs)
+
+
+def test_engine_load_shedding_is_a_result_not_an_exception(qwen):
+    m, params = qwen
+    eng = _mk_engine(m, params, max_queue=1)
+    reqs = [Request(tokens=[i + 2, i + 3], max_new_tokens=3, priority=pr)
+            for i, pr in enumerate([0, 1, 2])]
+    for r in reqs:
+        eng.submit(r)                   # burst before any step
+    eng.run_until_idle()
+    # queue of 1: each overflow sheds the lowest-priority holder, so only
+    # the highest-priority request of the burst survives
+    assert [r.shed for r in reqs] == [True, True, False]
+    assert all(r.finish_reason is FinishReason.LOAD_SHED and
+               r.out_tokens == [] for r in reqs[:2])
+    assert eng.scheduler.shed_count == 2
+    assert reqs[2].finish_reason is FinishReason.COMPLETED
+    assert len(reqs[2].out_tokens) == 3
+
+
+def test_degradation_ladder_under_forced_pool_exhaustion(qwen):
+    """A pool squeeze drives pressure to 1.0: the engine must ride the
+    ladder up to admission-stop, keep every request alive (preempt, not
+    truncate), and come back down to normal once pages free up."""
+    m, params = qwen
+    eng = _mk_engine(m, params)
+    inj = FaultInjector(FaultSchedule(
+        [Fault(step=3, kind="pool_exhaust", duration=6)])).attach(eng)
+    reqs = [Request(tokens=[i + 2, i + 3], max_new_tokens=10)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    modes = []
+    while eng.scheduler.has_work:
+        eng.step()
+        modes.append(eng.mode)
+    assert max(modes) == MODE_STOP_ADMIT     # full ladder engaged
+    assert modes[-1] == MODE_NORMAL          # and released after the fault
+    assert inj.report()["by_kind"]["pool_exhaust"] >= 1
+    assert all(r.finish_reason is FinishReason.COMPLETED and
+               len(r.out_tokens) == 10 for r in reqs)
+    # the engine spent real steps at the top of the ladder
+    assert eng.mode_steps[MODE_STOP_ADMIT] > 0
+
+
+def test_router_submit_falls_back_when_a_replica_refuses(qwen):
+    m, params = qwen
+    router = _mk_router(m, params)
+    inj = FaultInjector(FaultSchedule(
+        [Fault(step=1, kind="submit_error", replica=0,
+               duration=5)])).attach(router)
+    router.step()                       # advance the fault clock into the window
+    req = Request(tokens=[2, 3], max_new_tokens=3)
+    eng = router.submit(req)            # replica 0 refuses -> falls through
+    assert eng is router.engines[1]
+    router.run_until_idle()
+    assert req.finish_reason is FinishReason.COMPLETED
+    assert inj.report()["by_kind"]["submit_error"] >= 1
+
+
+def test_router_submit_raises_only_when_every_replica_refuses(qwen):
+    m, params = qwen
+    router = _mk_router(m, params)
+    FaultInjector(FaultSchedule(
+        [Fault(step=1, kind="submit_error", replica=0, duration=5),
+         Fault(step=1, kind="submit_error", replica=1,
+               duration=5)])).attach(router)
+    router.step()
+    with pytest.raises(PagePoolExhausted, match="injected"):
+        router.submit(Request(tokens=[2, 3], max_new_tokens=2))
+
+
+def test_router_queues_cross_replica_and_sheds_only_when_all_full(qwen):
+    m, params = qwen
+    router = _mk_router(m, params, max_queue=1)
+    reqs = [Request(tokens=[i + 2, i + 3], max_new_tokens=3)
+            for i in range(3)]
+    assert router.submit(reqs[0]) is router.engines[0]
+    # replica 0's queue is full -> queue-room preference routes to 1
+    assert router.submit(reqs[1]) is router.engines[1]
+    # every queue full -> clean shed (newest, equal priority), no raise
+    router.submit(reqs[2])
+    assert reqs[2].finish_reason is FinishReason.LOAD_SHED
+    router.run_until_idle()
+    assert all(len(r.out_tokens) == 3 for r in reqs[:2])
+
+
+def test_graceful_drain_and_undrain(qwen):
+    m, params = qwen
+    router = _mk_router(m, params)
+    first = [Request(tokens=[i + 2, i + 3], max_new_tokens=6)
+             for i in range(2)]
+    for r in first:
+        router.submit(r)
+    router.drain(0)
+    assert router.health(0) is ReplicaHealth.DRAINING
+    late = [Request(tokens=[i + 7, i + 8], max_new_tokens=4)
+            for i in range(2)]
+    # a draining replica admits nothing, even as the less-loaded choice
+    assert all(router.submit(r) is router.engines[1] for r in late)
+    router.run_until_idle()
+    assert router.drained(0)            # in-flight work was finished
+    assert all(r.done and r.out_tokens for r in first + late)
+    router.undrain(0)
+    assert router.health(0) is ReplicaHealth.HEALTHY
+    assert router.submit(Request(tokens=[2], max_new_tokens=1)) \
+        is router.engines[0]
+    router.run_until_idle()
+
+
+def test_stall_watchdog_kills_replica_and_recovers_its_work(qwen):
+    m, params = qwen
+    baseline = [Request(tokens=[i + 2, i + 3], max_new_tokens=8)
+                for i in range(4)]
+    _mk_router(m, params).run([Request(tokens=list(r.tokens),
+                                       max_new_tokens=8)
+                               for r in baseline])  # warm compile only
+    fault_free = [Request(tokens=list(r.tokens), max_new_tokens=8)
+                  for r in baseline]
+    _mk_router(m, params).run(fault_free)
+
+    reqs = [Request(tokens=list(r.tokens), max_new_tokens=8)
+            for r in baseline]
+    router = _mk_router(m, params,
+                        router_kw=dict(stall_steps=4, retry_backoff=1))
+    FaultInjector(FaultSchedule(
+        [Fault(step=2, kind="slow", replica=0, duration=40)])).attach(router)
+    router.run(reqs)
+    assert router.status[0].health is ReplicaHealth.DEAD
+    assert "stalled" in router.status[0].death_reason
+    assert router.status[0].recovered_requests > 0
+    assert router.retried_requests > 0
+    for got, want in zip(reqs, fault_free):
+        assert got.finish_reason is FinishReason.COMPLETED
+        assert got.out_tokens == want.out_tokens   # recovery is exact
+
+
+def test_step_error_degrades_then_recovers_token_identical(qwen):
+    m, params = qwen
+    fault_free = [Request(tokens=[i + 2, i + 3], max_new_tokens=10)
+                  for i in range(2)]
+    _mk_router(m, params).run(fault_free)
+
+    reqs = [Request(tokens=list(r.tokens), max_new_tokens=10)
+            for r in fault_free]
+    router = _mk_router(m, params)
+    FaultInjector(FaultSchedule(
+        [Fault(step=3, kind="step_error", replica=0)])).attach(router)
+    router.run(reqs)
+    assert router.status[0].total_failures == 1
+    assert router.status[0].health is ReplicaHealth.HEALTHY  # recovered
+    for got, want in zip(reqs, fault_free):
+        assert got.out_tokens == want.out_tokens
+
+
+def test_crash_recovery_never_sheds_recovered_requests(qwen):
+    """Rescuing a request off a dead replica must bypass the queue bound:
+    the cluster already accepted it, so recovery may queue it over the
+    limit but never convert it into a LOAD_SHED."""
+    m, params = qwen
+    fault_free = [Request(tokens=[i + 2, i + 3], max_new_tokens=8)
+                  for i in range(4)]
+    _mk_router(m, params).run(fault_free)
+
+    reqs = [Request(tokens=list(r.tokens), max_new_tokens=8)
+            for r in fault_free]
+    router = _mk_router(m, params, max_queue=1)
+    FaultInjector(FaultSchedule(
+        [Fault(step=4, kind="crash", replica=1)])).attach(router)
+    for r in reqs[:2]:
+        router.submit(r)
+    router.step()                       # into slots, queues empty again
+    for r in reqs[2:]:
+        router.submit(r)
+    router.run_until_idle()
+    assert router.status[1].recovered_requests > 0
+    assert not any(r.shed for r in reqs)
+    for got, want in zip(reqs, fault_free):
+        assert got.finish_reason is FinishReason.COMPLETED
+        assert got.out_tokens == want.out_tokens
+
+
+def test_chaos_canned_schedule_token_identity_and_zero_lost(qwen):
+    """The acceptance scenario: pool squeeze + one-shot decode failure on
+    replica 0, a stall window then a hard crash of replica 1 mid-decode.
+    Every request must finish (zero lost), greedy outputs must match the
+    fault-free run token for token, and recovery must not duplicate or
+    drop tokens across the replica move."""
+    m, params = qwen
+    prompts = [[i + 2, i + 3, i + 4] for i in range(6)]
+    fault_free = [Request(tokens=list(p), max_new_tokens=12)
+                  for p in prompts]
+    _mk_router(m, params).run(fault_free)
+
+    reqs = [Request(tokens=list(p), max_new_tokens=12) for p in prompts]
+    router = _mk_router(m, params)
+    inj = FaultInjector(FaultSchedule.canned(replicas=2)).attach(router)
+    for r in reqs:
+        router.submit(r)
+    router.run_until_idle()
+
+    assert all(r.done for r in reqs)                 # zero lost
+    assert not any(r.shed for r in reqs)             # unbounded queues
+    for got, want in zip(reqs, fault_free):
+        assert got.finish_reason is FinishReason.COMPLETED
+        assert got.out_tokens == want.out_tokens     # token identity
+        assert len(got.out_tokens) == 12             # no duplicated tokens
+        assert got.arrival is not None               # stamps preserved
+    assert router.status[1].health is ReplicaHealth.DEAD
+    assert router.status[1].recovered_requests > 0   # crash recovery ran
+    assert any(r.retries > 0 for r in reqs)
+    fired = inj.report()["by_kind"]
+    assert fired.get("pool_exhaust", 0) >= 1
+    assert fired.get("crash", 0) >= 1
+    assert fired.get("step_error", 0) >= 1
+    assert router.stats()["replicas"][1]["death_reason"]
