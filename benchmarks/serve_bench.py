@@ -47,6 +47,16 @@ decode failure + replica crash mid-decode; docs/robustness.md), asserting
 zero lost requests and token-identical completed output, and reporting
 goodput (``--smoke`` asserts >= 90%).
 
+``--longctx`` adds the long-context decode A/B (docs/kernels.md §Paged
+flash decode): paged state is built directly at an 8k-token context and
+one greedy decode chain runs through ``decode_paged`` twice — once on the
+legacy gather path (``QuantConfig.flash="gather"``: pool -> dense KV view
+every step) and once on the flash page-table path (``"pallas"`` on TPU,
+the XLA ``"ref"`` formulation on CPU hosts). The chains are asserted
+token-identical; ``--smoke`` additionally asserts the flash row wins
+tokens/s (>= 1.0x floor; typical CPU margin is ~1.3x — the dense view
+re-materialises ~25MB/step that the flash path never touches).
+
 ``--snapshot PATH`` (or ``auto``) writes every emitted row plus run
 metadata to a ``BENCH_serve.json`` perf snapshot — the on-disk trajectory
 for ROADMAP item 5.
@@ -59,6 +69,7 @@ import sys
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.core.lut import DENSE
@@ -68,9 +79,9 @@ from repro.serve import (BatchToCompletionEngine, Engine, FaultInjector,
                          ReplicaRouter, Request, SpecConfig)
 
 try:                                   # `python -m benchmarks.serve_bench`
-    from .common import emit, snapshot
+    from .common import emit, snapshot, time_jax_pair
 except ImportError:                    # `python benchmarks/serve_bench.py`
-    from common import emit, snapshot
+    from common import emit, snapshot, time_jax_pair
 
 
 def mixed_workload(n_requests: int, slots: int, prompt_len: int = 4,
@@ -292,9 +303,86 @@ def chaos_bench(slots: int, n_requests: int, max_seq: int,
     return goodput
 
 
+def longctx_bench(smoke: bool, ctx: int = 8192, slots: int = 2,
+                  steps: int = 8) -> float:
+    """Long-context decode A/B: flash page-table decode vs the gather path.
+
+    The paged state is synthesised directly — pool pages filled with
+    unit-normal pseudo prompt KV, a fully-allocated page table, per-slot
+    positions [ctx-1, ctx//2] — because the row measures the *decode*
+    path and an 8k real prefill would dominate the wall clock without
+    touching it. head_dim is widened to 64 (the smoke config's 16 keeps
+    the whole model tiny; at 8k the interesting regime is KV-traffic-
+    bound, which is head_dim-proportional). A greedy chain of ``steps``
+    tokens runs under ``QuantConfig.flash="gather"`` and under the flash
+    impl for this host ("pallas" on TPU, "ref" on CPU); the chains must
+    be token-identical, then one steady-state step is timed interleaved.
+    Returns the flash/gather tokens/s ratio (``--smoke`` asserts >= 1.0).
+    """
+    ps = 16
+    cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive",
+                                                 head_dim=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0), DENSE)
+    pages_per_slot = (ctx + steps + ps - 1) // ps
+    num_pages = slots * pages_per_slot
+    kv = model.init_paged_cache(slots, ctx + steps, ps, num_pages)
+    key = jax.random.PRNGKey(1)
+    kv = {k: jax.random.normal(jax.random.fold_in(key, i), v.shape,
+                               v.dtype) * 0.3
+          for i, (k, v) in enumerate(sorted(kv.items()))}
+    page_table = jnp.arange(num_pages, dtype=jnp.int32).reshape(
+        slots, pages_per_slot)
+    pos0 = jnp.array(([ctx - 1] + [ctx // 2] * (slots - 1))[:slots],
+                     jnp.int32)
+    tok0 = jnp.full((slots, 1), 3, jnp.int32)
+    flash = "pallas" if jax.default_backend() == "tpu" else "ref"
+
+    def mk_step(impl):
+        qc = DENSE.replace(flash=impl)
+
+        def step(tok, kv, positions):
+            logits, kv = model.decode_paged(params, tok, kv, page_table,
+                                            positions, qc)
+            return jnp.argmax(logits, -1).astype(jnp.int32), kv
+        return jax.jit(step)
+
+    def run_chain(step_fn):
+        toks, kv_r, posn, tok = [], kv, pos0, tok0
+        for _ in range(steps):
+            nxt, kv_r = step_fn(tok, kv_r, posn)
+            toks.append([int(t) for t in nxt])
+            tok, posn = nxt[:, None], posn + 1
+        return toks
+
+    gather_j, flash_j = mk_step("gather"), mk_step(flash)
+    streams = {"gather": run_chain(gather_j), flash: run_chain(flash_j)}
+    assert streams[flash] == streams["gather"], (
+        f"longctx: flash ({flash}) greedy chain diverged from the gather "
+        f"path")
+    t_g, t_f = time_jax_pair(gather_j, flash_j, tok0, kv, pos0,
+                             warmup=1, iters=5)
+    view_mb = (2 * slots * pages_per_slot * ps * cfg.num_kv_heads
+               * cfg.head_dim * cfg.num_layers * 4 / 1e6)
+    ratio = t_g / t_f
+    emit(f"serve.longctx{ctx}.gather.us_per_tok", t_g / slots,
+         f"dense KV view {view_mb:.1f}MB/step")
+    emit(f"serve.longctx{ctx}.flash_{flash}.us_per_tok", t_f / slots,
+         f"{ratio:.2f}x vs gather; tokens identical over {steps} "
+         f"greedy steps x {slots} slots")
+    print(f"longctx {ctx}: flash ({flash}) {ratio:.2f}x tokens/s vs "
+          f"gather, token-identical greedy chains")
+    if smoke:
+        assert ratio >= 1.0, (
+            f"flash decode must not lose to the gather path at {ctx}-token "
+            f"context, got {ratio:.2f}x")
+        print("longctx smoke check OK (>= 1.0x, token-identical)")
+    return ratio
+
+
 def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
           sharded: bool = False, devices: int = 0, spec: bool = False,
-          chaos: bool = False):
+          chaos: bool = False, longctx: bool = False):
     cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0), DENSE)
@@ -367,6 +455,9 @@ def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
     # fault-injected rows (2-replica router under the canned schedule)
     if chaos:
         chaos_bench(slots, n_requests, max_seq, smoke)
+    # 8k-context decode A/B (flash page-table decode vs gather)
+    if longctx:
+        longctx_bench(smoke)
     return ratio
 
 
@@ -388,6 +479,10 @@ def main():
                     help="add fault-injected rows: a 2-replica router under "
                          "the canned chaos schedule (with --smoke, asserts "
                          "zero lost requests and >= 90%% goodput)")
+    ap.add_argument("--longctx", action="store_true",
+                    help="add the 8k-context decode A/B: flash page-table "
+                         "decode vs the gather path (with --smoke, asserts "
+                         "token-identical chains and >= 1.0x tokens/s)")
     ap.add_argument("--snapshot", default="",
                     help="write a BENCH_serve.json perf snapshot to this "
                          "path ('auto' = repo root)")
@@ -411,7 +506,7 @@ def main():
                             f"{args.devices}").strip()
         os.execve(sys.executable, [sys.executable] + sys.argv, env)
     bench(args.slots, args.requests, args.max_seq, args.smoke, args.sharded,
-          args.devices, args.spec, args.chaos)
+          args.devices, args.spec, args.chaos, args.longctx)
     if args.snapshot:
         path = args.snapshot
         if path == "auto":
@@ -421,7 +516,7 @@ def main():
                  smoke=args.smoke, slots=args.slots,
                  requests=args.requests, max_seq=args.max_seq,
                  sharded=bool(args.sharded), spec=bool(args.spec),
-                 chaos=bool(args.chaos))
+                 chaos=bool(args.chaos), longctx=bool(args.longctx))
 
 
 if __name__ == "__main__":

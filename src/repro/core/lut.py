@@ -46,6 +46,10 @@ class QuantConfig:
     impl: str = "auto"             # kernel impl: auto | fused | pallas | ref
     fuse: bool = True              # lut_infer: one fused assign+LUT kernel
     #                                (indices stay in VMEM) vs two-pass
+    flash: str = "auto"            # paged decode attention: auto | pallas |
+    #                                ref | gather (auto = pallas on TPU,
+    #                                gather elsewhere; see kernels/
+    #                                flash_decode.py)
 
     @property
     def spec(self) -> CodebookSpec:

@@ -2,6 +2,8 @@
 fused assign→lut_gemm pipeline that keeps indices out of HBM)."""
 from . import ops, ref, tuning
 from .assign import vq_assign_pallas
+from .flash_decode import (combine_splits, flash_decode_paged,
+                           reduce_splits, resolve_flash_impl)
 from .fused_amm import vq_amm_pallas
 from .lut_gemm import lut_gemm_pallas
 from .ops import lut_matmul, vq_amm, vq_assign

@@ -1,0 +1,355 @@
+"""Paged flash-decode: attention over the paged KV pool, no gather.
+
+``decode_paged`` historically materialised a dense per-slot KV view with
+``model._paged_view`` (an HBM gather of every allocated page) before
+running plain SDPA. This module reads the pool *in place* through the
+page table instead — the LUT-DLA operand-residency discipline (CCM→IMM)
+applied to attention:
+
+  * **split-KV**: each slot's logical KV length is cut into fixed-size
+    splits of ``split_pages`` pages (splits align to page boundaries by
+    construction). Every split reduces to a triple ``(m, l, acc)`` —
+    running max, sum of exponentials at that max, and the partial
+    numerator ``sum_j exp(s_j - m) v_j``.
+  * **LSE reduction**: triples form a commutative monoid under
+    :func:`combine_splits` with identity ``(NEG_INF, 0, 0)``; a second
+    tiny pass (:func:`reduce_splits`) folds the per-split triples and
+    the new token's self term into the exact softmax output. All-masked
+    splits (unallocated / out-of-window pages) emit the identity, never
+    NaN: probabilities are forced to zero *under the mask*, not by
+    relying on ``exp(-inf)``.
+  * **GQA in-tile**: queries arrive grouped ``(B, KVH, G, D)`` so the
+    ``G`` query heads sharing one kv head hit the same K/V tile; the
+    Pallas kernel carries a ``(bh, G)`` running state per block of
+    ``bh`` kv heads.
+  * **trash-page redirection**: ``phys`` already maps unallocated pages
+    to the trash page; their keys all sit at ``kj >= pos`` and are
+    masked, so whatever the trash page holds is never attended.
+
+Three implementations share the same masks and split algebra:
+
+  ``pallas``  — the real kernel. Scalar-prefetched page table drives the
+                BlockSpec index map, so each (slot, split, page) grid
+                step DMAs exactly one physical page into VMEM.
+  ``ref``     — XLA-native. Scores are computed against the *whole*
+                pool and gathered per slot (scores are ~8x smaller than
+                KV rows, so this moves far less HBM traffic than
+                gathering K/V), then probabilities scatter back to pool
+                space for the value contraction.
+  (callers may also pick ``gather`` upstream — the legacy
+  ``_paged_view`` + ``_sdpa_decode_combine`` path, see
+  ``model.decode_paged``.)
+
+The pure split-triple functions double as the property-test surface:
+``tests/test_flash_decode.py`` checks split-count/order invariance and
+identity behaviour against the full-softmax oracle
+:func:`repro.kernels.ref.flash_decode_ref`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .tuning import select_blocks
+
+# Finite stand-in for -inf. exp(NEG_INF - NEG_INF) == 1 (not NaN), which
+# is exactly what makes the identity triple compose safely.
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# split-triple algebra (pure, tiny — the property-test surface)
+# ---------------------------------------------------------------------------
+
+def combine_splits(a: Tuple[jax.Array, jax.Array, jax.Array],
+                   b: Tuple[jax.Array, jax.Array, jax.Array]):
+    """Merge two split triples ``(m, l, acc)`` into one.
+
+    Associative and commutative; ``(NEG_INF, 0, 0)`` is the identity.
+    ``m`` is the running max, ``l`` the sum of ``exp(s - m)``, and
+    ``acc`` the matching partial numerator (trailing value axis).
+    """
+    m_a, l_a, o_a = a
+    m_b, l_b, o_b = b
+    m = jnp.maximum(m_a, m_b)
+    wa = jnp.exp(m_a - m)
+    wb = jnp.exp(m_b - m)
+    return (m, l_a * wa + l_b * wb,
+            o_a * wa[..., None] + o_b * wb[..., None])
+
+
+def reduce_splits(m: jax.Array, l: jax.Array, acc: jax.Array):
+    """Fold per-split triples over the leading split axis in one pass.
+
+    m, l: (NS, ...); acc: (NS, ..., D). Returns the combined triple
+    (same as left-folding :func:`combine_splits`, but vectorised).
+    """
+    m_t = jnp.max(m, axis=0)
+    w = jnp.exp(m - m_t[None])
+    return m_t, jnp.sum(l * w, axis=0), jnp.sum(acc * w[..., None], axis=0)
+
+
+def _split_masks(pos, win, ks, kj):
+    """Shared causal/window/kv_start mask. kj broadcasts against pos."""
+    mask = (kj < pos) & (kj >= ks)
+    return mask & jnp.where(win > 0, kj > pos - win, True)
+
+
+def flash_decode_splits(qg: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, phys: jax.Array,
+                        pos: jax.Array, win: jax.Array, ks: jax.Array,
+                        split_pages: int):
+    """Per-split triples in plain JAX — the mid-level oracle.
+
+    qg: (B, KVH, G, D) float32 queries, already scaled by D**-0.5.
+    k_pages/v_pages: (P+1, page, KVH, D) pool (last page = trash).
+    phys: (B, NS*split_pages) physical page ids (trash-padded).
+    pos/ks: (B,) int32; win: scalar int32 (0 = no window).
+    Returns (m, l, acc) shaped (NS, B, KVH, G[, D]) float32.
+    """
+    b, kvh, g, d = qg.shape
+    ps = k_pages.shape[1]
+    nsp = phys.shape[1]
+    ns = nsp // split_pages
+    sl = split_pages * ps                                  # tokens / split
+    kg = k_pages[phys].reshape(b, ns, sl, kvh, d)
+    vg = v_pages[phys].reshape(b, ns, sl, kvh, d)
+    kj = jnp.arange(ns * sl, dtype=jnp.int32).reshape(ns, sl)
+    mask = _split_masks(pos[:, None, None], win, ks[:, None, None],
+                        kj[None])                          # (B, NS, SL)
+    sc = jnp.einsum("bkgd,bstkd->bskgt", qg, kg,
+                    preferred_element_type=jnp.float32)
+    sc = jnp.where(mask[:, :, None, None, :], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1)                               # (B, NS, KVH, G)
+    p = jnp.where(mask[:, :, None, None, :],
+                  jnp.exp(sc - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bskgt,bstkd->bskgd", p,
+                     vg.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    to_split = lambda t: jnp.moveaxis(t, 1, 0)             # (NS, B, ...)
+    return to_split(m), to_split(l), to_split(acc)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel (phase 1: per-split triples, pages DMAed in place)
+# ---------------------------------------------------------------------------
+
+def _flash_kernel(phys_ref, pos_ref, win_ref, ks_ref,    # scalar prefetch
+                  q_ref, k_ref, v_ref,                   # inputs
+                  m_ref, l_ref, acc_ref, *, ps, sp):
+    """One (slot, kv-head tile, split, page) grid step.
+
+    The page dimension is innermost, so (m, l, acc) output blocks stay
+    VMEM-resident across a split: init at page 0, rescale-and-accumulate
+    in place afterwards (the in-kernel LSE carry).
+    """
+    ib = pl.program_id(0)
+    is_ = pl.program_id(2)
+    ip = pl.program_id(3)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lp = is_ * sp + ip                                   # LOGICAL page id
+    kj = lp * ps + jax.lax.broadcasted_iota(jnp.int32, (1, 1, ps), 2)
+    mask = _split_masks(pos_ref[ib], win_ref[0], ks_ref[ib], kj)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bh, G, D)
+    k = jnp.transpose(k_ref[0].astype(jnp.float32), (1, 0, 2))  # (bh,ps,D)
+    sc = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    sc = jnp.where(mask, sc, NEG_INF)                    # (bh, G, ps)
+    m_prev = m_ref[0, 0]                                 # (bh, G)
+    m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+    p = jnp.where(mask, jnp.exp(sc - m_new[..., None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    v = jnp.transpose(v_ref[0].astype(jnp.float32), (1, 0, 2))  # (bh,ps,D)
+    pv = jax.lax.dot_general(p, v, (((2,), (1,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_ref[0, 0] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[0, 0] = acc_ref[0, 0] * alpha[..., None] + pv
+
+
+def _splits_pallas(qg, k_pages, v_pages, phys, pos, win, ks,
+                   split_pages: int, block_heads: int,
+                   interpret: bool = False):
+    """Phase-1 triples via ``pallas_call``. Same contract as
+    :func:`flash_decode_splits`; the page table is a scalar-prefetch
+    operand whose values drive the K/V BlockSpec index maps — each grid
+    step DMAs one physical page, nothing is ever gathered in HBM."""
+    b, kvh, g, d = qg.shape
+    ps = k_pages.shape[1]
+    sp = split_pages
+    ns = phys.shape[1] // sp
+    bh = block_heads
+    grid = (b, kvh // bh, ns, sp)
+
+    def page_map(ib, ih, is_, ip, phys_ref, *_):
+        return (phys_ref[ib, is_ * sp + ip], 0, ih, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bh, g, d),
+                         lambda ib, ih, is_, ip, *_: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, ps, bh, d), page_map),
+            pl.BlockSpec((1, ps, bh, d), page_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bh, g),
+                         lambda ib, ih, is_, ip, *_: (is_, ib, ih, 0)),
+            pl.BlockSpec((1, 1, bh, g),
+                         lambda ib, ih, is_, ip, *_: (is_, ib, ih, 0)),
+            pl.BlockSpec((1, 1, bh, g, d),
+                         lambda ib, ih, is_, ip, *_: (is_, ib, ih, 0, 0)),
+        ],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((ns, b, kvh, g), jnp.float32),
+        jax.ShapeDtypeStruct((ns, b, kvh, g), jnp.float32),
+        jax.ShapeDtypeStruct((ns, b, kvh, g, d), jnp.float32),
+    ]
+    kern = functools.partial(_flash_kernel, ps=ps, sp=sp)
+    return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        phys, pos, win, ks, qg, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# XLA-native impl ("ref"): page-table decode without gathering K/V rows
+# ---------------------------------------------------------------------------
+
+def _flash_xla(qg, k_pages, v_pages, phys, pos, win, ks):
+    """Whole-softmax paged decode moving only score-sized HBM traffic.
+
+    Per key token a score is KVH*G floats but a K row is KVH*D — scoring
+    against the whole pool and *gathering scores* (then scattering
+    probabilities for the V contraction) reads each pool page once and
+    never materialises a dense KV view. Returns the combined cache
+    triple (m, l, acc) shaped (B, KVH, G[, D]) — the caller folds the
+    self term.
+    """
+    b, kvh, g, d = qg.shape
+    p1, ps = k_pages.shape[0], k_pages.shape[1]
+    np_ = phys.shape[1]
+    sc_all = jnp.einsum("bkgd,ptkd->bptkg", qg, k_pages,
+                        preferred_element_type=jnp.float32)
+    sc = jnp.take_along_axis(
+        sc_all, phys[:, :, None, None, None], axis=1)    # (B,NP,ps,KVH,G)
+    kj = jnp.arange(np_ * ps, dtype=jnp.int32).reshape(np_, ps)
+    mask = _split_masks(pos[:, None, None], win, ks[:, None, None],
+                        kj[None])                        # (B, NP, ps)
+    sc = jnp.where(mask[..., None, None], sc, NEG_INF)
+    m = jnp.max(sc, axis=(1, 2))                         # (B, KVH, G)
+    p = jnp.where(mask[..., None, None],
+                  jnp.exp(sc - m[:, None, None]), 0.0)
+    l = jnp.sum(p, axis=(1, 2))
+    # scatter probabilities to pool space. A scatter-ADD keeps duplicate
+    # targets exact: unallocated pages of one slot all redirect to the
+    # trash page (their masked rows contribute zeros), and CoW-shared
+    # pages live in distinct batch rows so they never collide.
+    p_all = jnp.zeros((b, p1, ps, kvh, g), jnp.float32)
+    p_all = p_all.at[jnp.arange(b)[:, None], phys].add(p)
+    acc = jnp.einsum("bptkg,ptkd->bkgd", p_all,
+                     v_pages.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       k_new: jax.Array, v_new: jax.Array,
+                       phys: jax.Array, positions, *,
+                       window=0, kv_start=0, impl: str = "ref",
+                       split_pages: Optional[int] = None,
+                       block_heads: Optional[int] = None,
+                       interpret: bool = False) -> jax.Array:
+    """Single-token paged decode, numerically matching
+    ``layers._sdpa_decode_combine`` over the gathered view.
+
+    q (B,1,H,D); k_pages/v_pages (P+1, page, KVH, D) — one layer's slice
+    of the pool, last page = trash; k_new/v_new (B,1,KVH,D) the fresh
+    token (NOT yet in the pool — the caller scatters it afterwards).
+    phys (B, NP) physical page ids, already trash-redirected.
+    positions (B,) int32 per-slot lengths (-1 = inactive lane: output is
+    the garbage ``v_new`` row, discarded by the caller — same contract
+    as ``_sdpa_decode_combine``). window/kv_start: scalar or (B,).
+    impl: "pallas" | "ref". Returns (B, 1, H*D) in q.dtype.
+    """
+    b, s, h, d = q.shape
+    if s != 1:
+        raise ValueError(f"flash decode is single-token (got S={s})")
+    ps, kvh = k_pages.shape[1], k_pages.shape[2]
+    g = h // kvh
+    np_ = phys.shape[1]
+    scale = d ** -0.5
+    qg = q.reshape(b, kvh, g, d).astype(jnp.float32) * scale
+    pos = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (b,))
+    ks = jnp.broadcast_to(jnp.asarray(kv_start, jnp.int32), (b,))
+    win = jnp.asarray(window, jnp.int32).reshape(-1)[:1]   # (1,) scalar
+
+    if impl == "pallas":
+        blk = select_blocks("flash_decode", b, np_, ps, d,
+                            k_pages.dtype.itemsize)
+        sp = min(split_pages or blk.block_k, np_)
+        bh = min(block_heads or blk.block_n, kvh)
+        while kvh % bh:
+            bh -= 1
+        pad = (-np_) % sp
+        if pad:                       # trash-pad: kj >= NP*page >= pos
+            phys = jnp.pad(phys, ((0, 0), (0, pad)),
+                           constant_values=k_pages.shape[0] - 1)
+        m, l, acc = _splits_pallas(qg, k_pages, v_pages, phys, pos, win,
+                                   ks, sp, bh, interpret=interpret)
+        m, l, acc = reduce_splits(m, l, acc)
+    elif impl == "ref":
+        m, l, acc = _flash_xla(qg, k_pages, v_pages, phys, pos, win[0], ks)
+    else:
+        raise ValueError(f"unknown flash impl {impl!r} (pallas | ref)")
+
+    # fold the self term (qg is pre-scaled). The new token is always
+    # live, so the denominator is >= exp(0) — never zero, even for
+    # fully-masked (pos=-1) lanes.
+    s_new = jnp.einsum("bkgd,bkd->bkg", qg,
+                       k_new[:, 0].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    m_f = jnp.maximum(m, s_new)
+    alpha = jnp.exp(m - m_f)
+    p_new = jnp.exp(s_new - m_f)
+    denom = l * alpha + p_new
+    out = (acc * alpha[..., None]
+           + p_new[..., None] * v_new[:, 0, :, None, :].astype(jnp.float32))
+    out = out / denom[..., None]
+    return out.reshape(b, 1, h * d).astype(q.dtype)
+
+
+def resolve_flash_impl(flash: str, on_tpu: Optional[bool] = None) -> str:
+    """Map ``QuantConfig.flash`` to a concrete decode impl.
+
+    "auto" picks the Pallas kernel on TPU and the legacy gather path on
+    CPU hosts: interpret-mode Pallas is orders of magnitude slower than
+    XLA, and "gather" keeps CPU decode bit-identical to earlier
+    releases. Opt into "ref" explicitly for the XLA no-gather path.
+    """
+    if flash == "auto":
+        if on_tpu is None:
+            on_tpu = jax.default_backend() == "tpu"
+        return "pallas" if on_tpu else "gather"
+    if flash not in ("pallas", "ref", "gather"):
+        raise ValueError(
+            f"unknown flash mode {flash!r} (auto | pallas | ref | gather)")
+    return flash

@@ -83,3 +83,48 @@ def lut_gemm_onehot(idx: jax.Array, lut: jax.Array,
     if scale is not None:
         out = out * scale[None, :].astype(out_dtype)
     return out
+
+
+def flash_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     k_new: jax.Array, v_new: jax.Array,
+                     phys: jax.Array, positions, window=0,
+                     kv_start=0) -> jax.Array:
+    """Oracle for paged flash decode: gather the view, one full softmax.
+
+    No online/split reductions at all — the (trusted) dense formulation
+    the split-KV kernel must reproduce to fp32 tolerance.
+
+    q (B,1,H,D); k_pages/v_pages (P+1, page, KVH, D) one-layer pool
+    slice; k_new/v_new (B,1,KVH,D) the fresh token; phys (B, NP)
+    trash-redirected page ids; positions (B,) per-slot lengths (-1 =
+    inactive). Returns (B, 1, H*D) in q.dtype.
+    """
+    b, _, h, d = q.shape
+    ps, kvh = k_pages.shape[1], k_pages.shape[2]
+    g = h // kvh
+    np_ = phys.shape[1]
+    t = np_ * ps
+    qg = q.reshape(b, kvh, g, d).astype(jnp.float32)
+    kg = k_pages[phys].reshape(b, t, kvh, d).astype(jnp.float32)
+    vg = v_pages[phys].reshape(b, t, kvh, d).astype(jnp.float32)
+    scale = d ** -0.5
+    kj = jnp.arange(t, dtype=jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (b,))
+    ks = jnp.broadcast_to(jnp.asarray(kv_start, jnp.int32), (b,))
+    win = jnp.asarray(window, jnp.int32)
+    mask = (kj[None] < pos[:, None]) & (kj[None] >= ks[:, None])
+    mask = mask & jnp.where(win > 0, kj[None] > pos[:, None] - win, True)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg, kg,
+                    preferred_element_type=jnp.float32) * scale
+    s_new = jnp.einsum("bkgd,bkd->bkg", qg,
+                       k_new[:, 0].astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * scale
+    sc_all = jnp.concatenate([sc, s_new[..., None]], axis=-1)
+    mask_all = jnp.concatenate(
+        [mask, jnp.ones((b, 1), bool)], axis=-1)       # self: always live
+    sc_all = jnp.where(mask_all[:, None, None, :], sc_all, -1e30)
+    probs = jax.nn.softmax(sc_all, axis=-1)
+    v_all = jnp.concatenate([vg, v_new[:, :1].astype(jnp.float32)], axis=1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v_all,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h * d).astype(q.dtype)

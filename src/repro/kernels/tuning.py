@@ -35,21 +35,27 @@ class BlockConfig:
 
 
 #: regime -> kernel kind -> (bm, bn, bk).  ``bn`` is unused by "assign".
+#: "flash_decode" reinterprets the axes (see select_blocks): bm is the
+#: per-step slot tile (always 1 — one grid row per slot), bn the kv-head
+#: tile and bk the pages per split.
 _TABLE = {
     "decode": {
         "assign":   BlockConfig(8, 0, 16),
         "lut_gemm": BlockConfig(8, 512, 16),
         "fused":    BlockConfig(8, 512, 16),
+        "flash_decode": BlockConfig(1, 8, 4),
     },
     "mid": {
         "assign":   BlockConfig(128, 0, 8),
         "lut_gemm": BlockConfig(128, 256, 16),
         "fused":    BlockConfig(128, 256, 8),
+        "flash_decode": BlockConfig(1, 8, 8),
     },
     "prefill": {
         "assign":   BlockConfig(256, 0, 8),
         "lut_gemm": BlockConfig(256, 512, 16),
         "fused":    BlockConfig(256, 512, 8),
+        "flash_decode": BlockConfig(1, 8, 8),
     },
 }
 
@@ -80,12 +86,27 @@ def select_blocks(kind: str, m: int, nc: int, c: int,
                   itemsize: int = 4) -> BlockConfig:
     """Pick (block_m, block_n, block_k) for kernel ``kind`` on this shape.
 
-    kind: "assign" | "lut_gemm" | "fused".  All values are upper bounds —
-    callers clamp to the actual dims (and pad non-multiples).
+    kind: "assign" | "lut_gemm" | "fused" | "flash_decode".  All values
+    are upper bounds — callers clamp to the actual dims (and pad
+    non-multiples).
     itemsize: bytes per LUT entry (1 for int8 LUTs — they fit 4x bigger
     tiles in the same VMEM budget).
+
+    For "flash_decode" the axes are reinterpreted for the paged
+    attention kernel: m = batch slots, nc = pages per slot, c = page
+    size (tokens), n = head_dim, itemsize = KV pool bytes/elt. The
+    returned block_n is the kv-head tile (halved until the double-
+    buffered K+V page tile fits VMEM) and block_k the pages per split.
     """
     cfg = _TABLE[regime(m)][kind]
+    if kind == "flash_decode":
+        bh = cfg.block_n
+        hd = n or 128
+        # resident per grid step: K and V page tiles (double-buffered)
+        while bh > 1 and 4 * c * bh * hd * itemsize > _VMEM_BUDGET:
+            bh //= 2
+        sp = min(cfg.block_k, max(nc, 1))
+        return BlockConfig(cfg.block_m, bh, sp)
     bm = min(cfg.block_m, max(m, 1))
     bk = min(cfg.block_k, max(nc, 1))
     if kind == "assign":

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lut import QuantConfig, lut_linear_apply, lut_linear_init
+from repro.kernels.flash_decode import flash_decode_paged
 
 Params = Dict
 
@@ -462,6 +463,8 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
               cache: Optional[Params] = None,
               decode_slab: bool = False,
               kv_start=0,
+              paged_phys: Optional[jax.Array] = None,
+              flash_impl: str = "ref",
               ) -> Tuple[jax.Array, jax.Array, Optional[Params]]:
     """Pre-norm GQA attention block. Returns (out, recon, new_cache).
 
@@ -485,6 +488,13 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
         (the left-pad convention: batch-to-completion engines right-align
         prompts, so rows [0, pad_len) hold pad garbage that must never be
         attended; see docs/serving.md).
+      paged_phys: (B, NP) trash-redirected physical page ids. When set
+        (single-token ``decode_slab`` only), ``cache`` is one layer's
+        slice of the paged POOL ``{"k": (P+1, page, KVH, HD), ...}`` and
+        decode runs the flash kernel straight off the pages — no dense
+        per-slot view exists (see kernels/flash_decode.py).
+      flash_impl: "pallas" | "ref" — concrete flash impl (the "auto" /
+        "gather" resolution happens in ``model.decode_paged``).
 
     Returns: (out (B, S, D), recon scalar, new_cache or slab or None).
     """
@@ -513,10 +523,20 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
         v = v.reshape(b, s, kvh, hd)
     if decode_slab and cache is not None and cfg.head_layout != "hd":
         if s == 1:
-            out = _sdpa_decode_combine(q, cache["k"].astype(x.dtype),
-                                       cache["v"].astype(x.dtype),
-                                       k.astype(x.dtype), v.astype(x.dtype),
-                                       q_offset, window, kv_start=kv_start)
+            if paged_phys is not None:
+                # paged flash decode: cache is the raw page pool slice;
+                # the kernel walks it through the page table in place.
+                out = flash_decode_paged(
+                    q, cache["k"], cache["v"], k, v, paged_phys,
+                    q_offset, window=window, kv_start=kv_start,
+                    impl=flash_impl,
+                    interpret=jax.default_backend() != "tpu")
+            else:
+                out = _sdpa_decode_combine(
+                    q, cache["k"].astype(x.dtype),
+                    cache["v"].astype(x.dtype),
+                    k.astype(x.dtype), v.astype(x.dtype),
+                    q_offset, window, kv_start=kv_start)
         else:
             # multi-token verify (speculative decoding): the cache stays
             # read-only; the S proposed tokens attend committed rows

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lut import DENSE, QuantConfig
+from repro.kernels.flash_decode import resolve_flash_impl
 from .config import ModelConfig
 from .layers import (attention, init_attention, init_mlp, mlp, rms_norm)
 from .mamba2 import init_mamba2, mamba2_block, mamba2_decode
@@ -145,7 +146,8 @@ class Model:
                     q_offset, prefix_len,
                     cache: Optional[Params] = None,
                     kv_start=0, valid_len=None, return_slabs: bool = False,
-                    multi_slab: bool = False):
+                    multi_slab: bool = False,
+                    paged_phys=None, flash_impl: str = "ref"):
         """Scan over the layer stack. Returns (x, recon, moe_aux, new_cache).
 
         q_offset: scalar, or (B,) per-row decode positions (paged serving).
@@ -163,6 +165,11 @@ class Model:
           q_offset positions are honoured, and each layer emits a
           (B, S, KVH, HD) fresh-KV slab. Attention families only;
           requires ``return_slabs``.
+        paged_phys / flash_impl: single-token decode only — ``cache`` is
+          the raw paged POOL (``{"k": (L, P+1, page, KVH, HD), ...}``)
+          and each layer's attention runs the flash-decode kernel
+          through the page table instead of over a gathered view (see
+          ``decode_paged`` and kernels/flash_decode.py).
         """
         cfg = self.cfg
         windows = self._windows()
@@ -192,7 +199,9 @@ class Model:
                                          q_offset=q_offset, window=win,
                                          prefix_len=prefix_len, cache=c_l,
                                          decode_slab=slab_mode,
-                                         kv_start=kv_start)
+                                         kv_start=kv_start,
+                                         paged_phys=paged_phys,
+                                         flash_impl=flash_impl)
                 h = h + a
                 if cfg.family == "moe":
                     f, r2, a2 = moe_ffn(p_l["moe"], h, cfg, qc)
@@ -757,10 +766,20 @@ class Model:
             trash = kv["k"].shape[1] - 1
             ps = kv["k"].shape[2]
             phys = jnp.where(page_table >= 0, page_table, trash)  # (B, NP)
-            view = self._paged_view(kv, phys)
-            x, _, _, slabs = self._run_blocks(
-                params, x, qc, q_offset=positions, prefix_len=0,
-                cache=view, return_slabs=True)
+            # dispatch knob (mirrors QuantConfig.fuse): "gather" is the
+            # legacy dense-view path; "pallas"/"ref" run flash decode
+            # straight off the page pool (kernels/flash_decode.py).
+            flash = resolve_flash_impl(qc.flash)
+            if flash == "gather":
+                view = self._paged_view(kv, phys)
+                x, _, _, slabs = self._run_blocks(
+                    params, x, qc, q_offset=positions, prefix_len=0,
+                    cache=view, return_slabs=True)
+            else:
+                x, _, _, slabs = self._run_blocks(
+                    params, x, qc, q_offset=positions, prefix_len=0,
+                    cache=kv, return_slabs=True,
+                    paged_phys=phys, flash_impl=flash)
             page, off = pos_c // ps, pos_c % ps
             # non-decoding lanes MUST NOT write through their page table:
             # a mid-prefill slot's pages hold real prompt KV.

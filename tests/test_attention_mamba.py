@@ -108,3 +108,135 @@ def test_ssd_state_decay_property():
     h0 = jnp.ones((B, H, P, N)) * 100.0
     _, h_final = ssd_chunked(x, dt, a_log, bm, cm, D, chunk=4, h0=h0)
     assert float(jnp.max(jnp.abs(h_final))) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# speculative-verify / paged-decode numerics backfill
+# ---------------------------------------------------------------------------
+
+def _softmax_rows(q_row, keys, vals, scale):
+    """Dense per-query oracle: q_row (d,), keys/vals (n, d) -> (d,)."""
+    sc = keys @ q_row * scale
+    p = np.exp(sc - sc.max())
+    p /= p.sum()
+    return p @ vals
+
+
+def _verify_oracle(q, kc, vc, kn, vn, pos, window):
+    """Loop-built ground truth for ``_sdpa_verify`` (live rows only)."""
+    b, s, h, d = q.shape
+    t, kvh = kc.shape[1], kc.shape[2]
+    g = h // kvh
+    scale = d ** -0.5
+    out = np.zeros((b, s, h * d), np.float32)
+    for bi in range(b):
+        for ti in range(s):
+            q_abs = pos[bi] + ti
+            cache_js = [j for j in range(t)
+                        if j < pos[bi]
+                        and (window <= 0 or j > q_abs - window)]
+            new_js = [j for j in range(ti + 1)
+                      if window <= 0 or (pos[bi] + j) > q_abs - window]
+            for kh in range(kvh):
+                keys = np.concatenate(
+                    [kc[bi, cache_js, kh], kn[bi, new_js, kh]], 0)
+                vals = np.concatenate(
+                    [vc[bi, cache_js, kh], vn[bi, new_js, kh]], 0)
+                for gi in range(g):
+                    hi = kh * g + gi
+                    out[bi, ti, hi * d:(hi + 1) * d] = _softmax_rows(
+                        q[bi, ti, hi], keys, vals, scale)
+    return out
+
+
+def test_verify_windowed_masks_with_dead_columns():
+    """_sdpa_verify with per-slot positions, a sliding window, AND dead
+    (trash-redirected) cache columns in the same case: stale rows >= pos
+    hold violent garbage that must never leak into live outputs, and an
+    inactive (-1) lane rides along."""
+    from repro.models.layers import _sdpa_verify
+    b, s, h, kvh, d, t = 3, 4, 4, 2, 8, 12
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    kc = jax.random.normal(ks[1], (b, t, kvh, d))
+    vc = jax.random.normal(ks[2], (b, t, kvh, d))
+    kn = jax.random.normal(ks[3], (b, s, kvh, d))
+    vn = jax.random.normal(ks[4], (b, s, kvh, d))
+    pos = np.array([-1, 3, 7])
+    window = 5
+    # poison every cache row >= pos[b] (stale draft KV / trash columns)
+    poison = np.ones((b, t), bool)
+    for bi, p_ in enumerate(pos):
+        poison[bi, :max(p_, 0)] = False
+    kc_a = jnp.where(jnp.asarray(poison)[..., None, None], 1e3, kc)
+    vc_a = jnp.where(jnp.asarray(poison)[..., None, None], -1e3, vc)
+    kc_b = jnp.where(jnp.asarray(poison)[..., None, None], -2e3, kc)
+    vc_b = jnp.where(jnp.asarray(poison)[..., None, None], 3e3, vc)
+    out_a = np.asarray(_sdpa_verify(q, kc_a, vc_a, kn, vn,
+                                    jnp.asarray(pos), window))
+    out_b = np.asarray(_sdpa_verify(q, kc_b, vc_b, kn, vn,
+                                    jnp.asarray(pos), window))
+    live = pos >= 0
+    # dead columns must be invisible: garbage flavour cannot matter
+    np.testing.assert_array_equal(out_a[live], out_b[live])
+    oracle = _verify_oracle(np.asarray(q), np.asarray(kc), np.asarray(vc),
+                            np.asarray(kn), np.asarray(vn), pos, window)
+    np.testing.assert_allclose(out_a[live], oracle[live],
+                               rtol=2e-4, atol=2e-4)
+    # window=0 (global) flavour over the same masks
+    out_g = np.asarray(_sdpa_verify(q, kc_a, vc_a, kn, vn,
+                                    jnp.asarray(pos), 0))
+    oracle_g = _verify_oracle(np.asarray(q), np.asarray(kc),
+                              np.asarray(vc), np.asarray(kn),
+                              np.asarray(vn), pos, 0)
+    np.testing.assert_allclose(out_g[live], oracle_g[live],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_combine_window_kv_start_dead_columns():
+    """_sdpa_decode_combine with per-row positions, window AND kv_start
+    in one case, plus poisoned masked rows (before kv_start, beyond pos):
+    output must equal the dense oracle and ignore the garbage."""
+    from repro.models.layers import _sdpa_decode_combine
+    b, h, kvh, d, t = 3, 4, 2, 8, 16
+    ks = jax.random.split(jax.random.fold_in(KEY, 42), 5)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    kc = jax.random.normal(ks[1], (b, t, kvh, d))
+    vc = jax.random.normal(ks[2], (b, t, kvh, d))
+    kn = jax.random.normal(ks[3], (b, 1, kvh, d))
+    vn = jax.random.normal(ks[4], (b, 1, kvh, d))
+    pos = np.array([14, 9, -1])
+    window, kv_start = 6, np.array([2, 0, 0])
+    live_mask = np.zeros((b, t), bool)
+    for bi, p_ in enumerate(pos):
+        for j in range(t):
+            live_mask[bi, j] = (j < p_ and j >= kv_start[bi]
+                                and j > p_ - window)
+    kc_p = jnp.where(jnp.asarray(~live_mask)[..., None, None], 5e2, kc)
+    vc_p = jnp.where(jnp.asarray(~live_mask)[..., None, None], -5e2, vc)
+    out = np.asarray(_sdpa_decode_combine(
+        q, kc_p, vc_p, kn, vn, jnp.asarray(pos), window,
+        kv_start=jnp.asarray(kv_start)))
+    # dense oracle: live cache rows + the always-live self term
+    scale = d ** -0.5
+    g = h // kvh
+    qn, kcn, vcn = np.asarray(q), np.asarray(kc), np.asarray(vc)
+    knn, vnn = np.asarray(kn), np.asarray(vn)
+    want = np.zeros((b, 1, h * d), np.float32)
+    for bi in range(b):
+        js = [j for j in range(t) if live_mask[bi, j]]
+        for kh in range(kvh):
+            keys = np.concatenate([kcn[bi, js, kh], knn[bi, :, kh]], 0)
+            vals = np.concatenate([vcn[bi, js, kh], vnn[bi, :, kh]], 0)
+            for gi in range(g):
+                hi = kh * g + gi
+                want[bi, 0, hi * d:(hi + 1) * d] = _softmax_rows(
+                    qn[bi, 0, hi], keys, vals, scale)
+    liverows = pos >= 0
+    np.testing.assert_allclose(out[liverows], want[liverows],
+                               rtol=2e-4, atol=2e-4)
+    # inactive lane (-1): output is exactly the fresh value row (each kv
+    # head's value repeated across its g query heads)
+    want_dead = np.repeat(np.asarray(vn)[2, 0][:, None, :], g,
+                          axis=1).reshape(-1)
+    np.testing.assert_allclose(out[2, 0], want_dead, rtol=1e-5, atol=1e-5)
