@@ -1,0 +1,91 @@
+"""Analysis CI gate: AST lint + jaxpr invariants vs the committed baseline.
+
+Usage:  PYTHONPATH=src python scripts/analyze.py \\
+            [--baseline analysis/baseline.json] [--update] \\
+            [--no-jaxpr] [--src src] [-v]
+
+Runs the AST lint (:mod:`repro.analysis.astlint`) and — unless
+``--no-jaxpr`` — the jaxpr/lowering invariant checks
+(:mod:`repro.analysis.jaxpr_check`), then diffs the gating findings
+against the committed baseline:
+
+* a finding whose key is in the baseline is GRANDFATHERED (reported,
+  exit 0);
+* a NEW finding (key absent) fails with exit 1;
+* a FIXED baselined key is reported so the baseline can be tightened.
+
+``--update`` rewrites the baseline from the current findings (commit
+the result; review the diff — shrinking is progress, growing needs a
+reason). ``info``-severity findings are the host-sync classification
+report (printed with ``-v``) and never gate.
+
+The recompile guard (:mod:`repro.analysis.recompile`) is dynamic and
+runs in the slow test job (``tests/test_recompile_guard.py``), not here.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline",
+                    default=os.path.join(ROOT, "analysis/baseline.json"))
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from current findings")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the (jax-importing) jaxpr invariant pass")
+    ap.add_argument("--src", default=os.path.join(ROOT, "src"),
+                    help="source root to lint")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print info-severity classification")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import (diff_baseline, load_baseline,
+                                run_ast_lint, save_baseline)
+
+    findings, graph = run_ast_lint(args.src)
+    if not args.no_jaxpr:
+        from repro.analysis import run_jaxpr_checks
+        findings = findings + run_jaxpr_checks()
+
+    n_traced, n_step = len(graph.traced), len(graph.step_loop)
+    by_sev = collections.Counter(f.severity for f in findings)
+    print(f"analyze: {n_traced} traced fn(s), {n_step} step-loop fn(s); "
+          f"{by_sev['error']} error / {by_sev['warn']} warn / "
+          f"{by_sev['info']} info finding(s)")
+    if args.verbose:
+        for f in sorted(findings, key=lambda f: (f.path, f.line)):
+            if f.severity == "info":
+                print("  " + f.render())
+
+    if args.update:
+        save_baseline(args.baseline, findings)
+        print(f"analyze: baseline rewritten -> {args.baseline} "
+              f"({by_sev['error'] + by_sev['warn']} key(s))")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new, grandfathered, fixed = diff_baseline(findings, baseline)
+    for f in grandfathered:
+        print(f"grandfathered (baseline): {f.render()}")
+    for k in fixed:
+        print(f"fixed (tighten baseline with --update): {k}")
+    if new:
+        print(f"\nanalyze: {len(new)} NEW finding(s) not in "
+              f"{os.path.relpath(args.baseline, ROOT)}:")
+        for f in new:
+            print(f.render())
+        return 1
+    print("analyze: OK (no new findings)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

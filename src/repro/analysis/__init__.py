@@ -1,0 +1,33 @@
+"""Static analysis + dynamic invariant checks for the serving hot path.
+
+Three cooperating passes (docs/analysis.md):
+
+* :mod:`repro.analysis.astlint` — AST lint over the whole package:
+  host syncs reachable from jitted entry points or the engine step
+  loop, host RNG/clock under trace, mutable default args, jits missing
+  ``static_argnames``, paged-allocator API misuse.
+* :mod:`repro.analysis.jaxpr_check` — traces every public entry point
+  and asserts structural jaxpr/lowering invariants: no f64, no
+  transfer ops, gather budgets, KV-pool donation.
+* :mod:`repro.analysis.recompile` — ``jax.log_compiles`` harness
+  asserting steady-state serving compiles exactly once per
+  (entry point, shape class).
+
+Findings are keyed (:class:`~repro.analysis.findings.Finding`) and
+diffed against the committed ``analysis/baseline.json`` by
+``scripts/analyze.py``: grandfathered debt passes, new findings fail.
+"""
+from .findings import (Finding, diff_baseline, load_baseline,
+                       save_baseline)
+from .astlint import run_ast_lint
+from .jaxpr_check import (check_donation, check_invariants, iter_eqns,
+                          run_jaxpr_checks)
+from .recompile import (CompileLog, GuardReport, compile_counts,
+                        run_recompile_guard)
+
+__all__ = [
+    "Finding", "load_baseline", "save_baseline", "diff_baseline",
+    "run_ast_lint", "run_jaxpr_checks", "check_invariants",
+    "check_donation", "iter_eqns", "CompileLog", "GuardReport",
+    "compile_counts", "run_recompile_guard",
+]

@@ -1,0 +1,656 @@
+"""AST lint pass: jit-safety rules over the whole ``repro`` package.
+
+The linter parses every module under ``src/repro``, builds a best-effort
+static call graph, and computes two reachability sets:
+
+  * **traced** — functions reachable from a jitted entry point: anything
+    decorated/wrapped with ``jax.jit`` (including ``functools.partial``
+    forms and lambdas passed to ``jax.jit``), functions passed to jax
+    combinators (``lax.scan`` / ``vmap`` / ``cond`` / ...), plus the
+    configured :data:`TRACED_SEEDS` (the serving entry points the engine
+    wraps in jit lambdas, which static resolution cannot follow).
+  * **step-loop** — host-side functions on the serving hot path,
+    reachable from :data:`STEP_SEEDS` (``Engine.step`` and friends) but
+    not traced.
+
+Rules (docs/analysis.md has the table; waive with ``# analysis:
+ok(<rule>)`` on the offending line or the enclosing ``def`` line):
+
+  host-sync             device-sync / tracer-leak calls (``.item()``,
+                        ``int(tracer)``, ``float(tracer)``,
+                        ``np.asarray``, ``jax.device_get``,
+                        ``block_until_ready``, ``.tolist()``) inside a
+                        TRACED function.                       [error]
+  step-sync             scattered device->host reads inside the engine
+                        step loop; batch them through one
+                        ``Engine._device_read`` pytree fetch.  [warn]
+  sync-site             the same calls anywhere else: host-side OK,
+                        reported for classification only.      [info]
+  host-rng-under-trace  Python ``random`` / ``np.random`` / ``time`` /
+                        ``datetime`` inside a TRACED function. [error]
+  mutable-default       mutable default argument values (list/dict/set
+                        literals error; shared call results warn — waive
+                        when the object is immutable).   [error|warn]
+  jit-static-args       a ``jax.jit``-wrapped callable invoked with a
+                        str/bool literal argument but compiled without
+                        ``static_argnames``/``static_argnums``. [error]
+  allocator-free        raw ``allocator.free(...)`` of refcounted pages
+                        outside ``kv_cache.py`` — route through
+                        ``PageTable.release`` / ``decref``.    [error]
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+
+# Serving/jit entry points whose jit wrapping the static pass cannot see
+# (the engine jits `lambda ...: model.prefill_paged(...)` — the bound
+# method behind a local variable). Reachability seeds, dotted qualnames.
+TRACED_SEEDS: Tuple[str, ...] = (
+    "repro.models.model.Model.forward",
+    "repro.models.model.Model.prefill",
+    "repro.models.model.Model.decode",
+    "repro.models.model.Model.prefill_paged",
+    "repro.models.model.Model.decode_paged",
+    "repro.models.model.Model.verify_paged",
+    "repro.kernels.ops.vq_assign",
+    "repro.kernels.ops.lut_matmul",
+    "repro.kernels.ops.vq_amm",
+    "repro.kernels.flash_decode.flash_decode_paged",
+    "repro.serve.speculative.ModelDrafter.bind.make_draft_k.draft_k",
+    "repro.serve.engine._sample_tokens",
+)
+
+# Host-side hot-loop seeds: the continuous engine's step machinery and
+# the per-round drafter hooks. Everything reachable from here runs once
+# per serving step — scattered device reads here are latency.
+STEP_SEEDS: Tuple[str, ...] = (
+    "repro.serve.engine.Engine.step",
+    "repro.serve.engine.Engine.run_until_idle",
+    "repro.serve.engine.BatchToCompletionEngine._run_batch",
+    "repro.serve.speculative.ModelDrafter.propose",
+    "repro.serve.speculative.NgramDrafter.propose",
+    "repro.serve.router.ReplicaRouter.step",
+)
+
+_WAIVER_RE = re.compile(r"#\s*analysis:\s*ok\(([^)]*)\)")
+
+_COMBINATORS = {
+    "jax.lax.scan", "lax.scan", "jax.lax.cond", "lax.cond",
+    "jax.lax.while_loop", "lax.while_loop", "jax.lax.switch", "lax.switch",
+    "jax.lax.map", "lax.map", "jax.vmap", "vmap", "jax.grad", "grad",
+    "jax.value_and_grad", "jax.checkpoint", "jax.remat",
+    "functools.partial", "partial", "jax.lax.fori_loop", "lax.fori_loop",
+}
+
+_SYNC_READ_KINDS = ("item", "tolist", "np.asarray", "device_get",
+                    "block_until_ready")
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One function (or jitted lambda) in the static call graph."""
+    qualname: str            # dotted, e.g. repro.serve.engine.Engine.step
+    module: str
+    path: str                # repo-relative
+    node: ast.AST            # FunctionDef / Lambda
+    lineno: int
+    cls: Optional[str]       # enclosing class simple name, if any
+    calls: List[tuple] = dataclasses.field(default_factory=list)
+    jit_root: bool = False
+
+
+class _ModuleIndex:
+    """Per-module symbol tables built in one AST pass."""
+
+    def __init__(self, module: str, path: str, tree: ast.Module,
+                 source: str):
+        self.module = module
+        self.path = path
+        self.tree = tree
+        self.imports: Dict[str, str] = {}       # alias -> module dotted
+        self.from_imports: Dict[str, str] = {}  # name -> module.name
+        self.functions: Dict[str, FunctionInfo] = {}   # qualname -> info
+        self.waivers: Dict[int, Set[str]] = {}  # line -> waived rules
+        # names assigned from jax.jit(...) without static args, and the
+        # calls made through them: (qualname_scope, name) -> jit lineno
+        self.nonstatic_jits: Dict[Tuple[str, str], int] = {}
+        for i, ln in enumerate(source.splitlines(), start=1):
+            m = _WAIVER_RE.search(ln)
+            if m:
+                self.waivers[i] = {r.strip() for r in m.group(1).split(",")
+                                   if r.strip()}
+        self._collect()
+
+    # -- helpers ----------------------------------------------------------
+    @staticmethod
+    def dotted(node: ast.AST) -> Optional[str]:
+        """'a.b.c' for nested Name/Attribute chains, else None."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+            return ".".join(reversed(parts))
+        return None
+
+    def _is_jax_jit(self, node: ast.AST) -> bool:
+        d = self.dotted(node)
+        if d is None:
+            return False
+        if d in ("jax.jit", "pjit", "jax.pjit"):
+            return True
+        return d == "jit" and self.from_imports.get("jit", "") == "jax.jit"
+
+    def _jit_call_static(self, call: ast.Call) -> bool:
+        return any(kw.arg in ("static_argnames", "static_argnums")
+                   for kw in call.keywords)
+
+    # -- collection -------------------------------------------------------
+    def _collect(self) -> None:
+        for node in self.tree.body:
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                self._add_import(node)
+        self._walk_scope(self.tree.body, prefix=self.module, cls=None)
+
+    def _add_import(self, node) -> None:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                self.imports[a.asname or a.name.split(".")[0]] = a.name
+        else:
+            mod = node.module or ""
+            if node.level:           # relative: resolve against this module
+                base = self.module.split(".")[:-node.level]
+                mod = ".".join(base + ([mod] if mod else []))
+            for a in node.names:
+                self.from_imports[a.asname or a.name] = f"{mod}.{a.name}"
+
+    def _walk_scope(self, body, prefix: str, cls: Optional[str]) -> None:
+        for node in body:
+            if isinstance(node, ast.ClassDef):
+                self._walk_scope(node.body, f"{prefix}.{node.name}",
+                                 cls=node.name)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add_function(node, prefix, cls)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                self._add_import(node)
+            else:
+                # module/class-level statements may contain jit lambdas
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Call) and \
+                            self._is_jax_jit(sub.func):
+                        self._register_jit_call(sub, prefix)
+
+    def _add_function(self, node, prefix: str, cls: Optional[str]) -> None:
+        qn = f"{prefix}.{node.name}"
+        info = FunctionInfo(qualname=qn, module=self.module, path=self.path,
+                            node=node, lineno=node.lineno, cls=cls)
+        for dec in node.decorator_list:
+            if self._is_jax_jit(dec):
+                info.jit_root = True
+            elif isinstance(dec, ast.Call):
+                d = self.dotted(dec.func)
+                if d in ("functools.partial", "partial") and dec.args and \
+                        self._is_jax_jit(dec.args[0]):
+                    info.jit_root = True
+        self.functions[qn] = info
+        self._scan_body(info, qn, cls)
+        # nested defs get their own entries (reachable via call edges)
+        for sub in _body_statements(node):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add_function(sub, qn, cls)
+            elif isinstance(sub, ast.ClassDef):
+                self._walk_scope(sub.body, f"{qn}.{sub.name}", sub.name)
+
+    def _register_jit_call(self, call: ast.Call, scope: str,
+                           info: Optional[FunctionInfo] = None) -> None:
+        """``jax.jit(X, ...)``: X becomes a traced root (Name) or a
+        synthetic traced lambda whose internal calls are edges."""
+        if not call.args:
+            return
+        arg = call.args[0]
+        if isinstance(arg, ast.Name):
+            if info is not None:
+                info.calls.append(("jitname", arg.id))
+            else:
+                self.functions.setdefault(
+                    f"{scope}.<jit@{call.lineno}>",
+                    FunctionInfo(f"{scope}.<jit@{call.lineno}>", self.module,
+                                 self.path, call, call.lineno, None,
+                                 calls=[("name", arg.id)], jit_root=True))
+        elif isinstance(arg, ast.Lambda):
+            qn = f"{scope}.<lambda@{arg.lineno}>"
+            lam = FunctionInfo(qualname=qn, module=self.module,
+                               path=self.path, node=arg, lineno=arg.lineno,
+                               cls=info.cls if info else None, jit_root=True)
+            self.functions[qn] = lam
+            self._scan_calls(arg.body, lam)
+
+    def _scan_body(self, info: FunctionInfo, scope: str,
+                   cls: Optional[str]) -> None:
+        for stmt in _body_statements(info.node):
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            self._scan_calls(stmt, info)
+            # track `name = jax.jit(...)` / `self._x = jax.jit(...)`
+            if isinstance(stmt, ast.Assign) and \
+                    isinstance(stmt.value, ast.Call) and \
+                    self._is_jax_jit(stmt.value.func) and \
+                    not self._jit_call_static(stmt.value):
+                for tgt in stmt.targets:
+                    name = self._target_name(tgt)
+                    if name:
+                        self.nonstatic_jits[(info.cls or info.qualname,
+                                             name)] = stmt.value.lineno
+
+    @staticmethod
+    def _target_name(tgt) -> Optional[str]:
+        if isinstance(tgt, ast.Name):
+            return tgt.id
+        if isinstance(tgt, ast.Attribute) and \
+                isinstance(tgt.value, ast.Name) and tgt.value.id == "self":
+            return f"self.{tgt.attr}"
+        return None
+
+    def _scan_calls(self, root: ast.AST, info: FunctionInfo) -> None:
+        """Record call edges inside one statement/expression subtree
+        (without descending into nested def/class bodies)."""
+        for node in _walk_no_defs(root):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if self._is_jax_jit(f):
+                self._register_jit_call(node, info.qualname, info)
+                continue
+            d = self.dotted(f)
+            if isinstance(f, ast.Name):
+                info.calls.append(("name", f.id))
+            elif isinstance(f, ast.Attribute):
+                if isinstance(f.value, ast.Name) and \
+                        f.value.id in ("self", "cls"):
+                    info.calls.append(("self", f.attr))
+                elif isinstance(f.value, ast.Name):
+                    info.calls.append(("mod", f.value.id, f.attr))
+            if d in _COMBINATORS:        # fn-valued args are call edges
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        info.calls.append(("name", arg.id))
+                    elif isinstance(arg, ast.Attribute) and \
+                            isinstance(arg.value, ast.Name) and \
+                            arg.value.id in ("self", "cls"):
+                        info.calls.append(("self", arg.attr))
+
+
+def _body_statements(node):
+    if isinstance(node, ast.Lambda):
+        return []
+    return node.body
+
+
+def _walk_no_defs(root: ast.AST):
+    """ast.walk that does not descend into nested function/class bodies
+    (non-jitted lambdas ARE descended — they run in the caller's
+    context)."""
+    stack = [root]
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue
+            stack.append(child)
+
+
+# ---------------------------------------------------------------------------
+# package loading + call-graph resolution
+# ---------------------------------------------------------------------------
+
+class PackageGraph:
+    """All modules of a package + resolved reachability sets."""
+
+    def __init__(self, indexes: Sequence[_ModuleIndex]):
+        self.modules = {ix.module: ix for ix in indexes}
+        self.functions: Dict[str, FunctionInfo] = {}
+        for ix in indexes:
+            self.functions.update(ix.functions)
+        # method name -> qualnames, per class simple name (self-call edges)
+        self._methods: Dict[Tuple[str, str], List[str]] = {}
+        for qn, fn in self.functions.items():
+            if fn.cls is not None:
+                self._methods.setdefault(
+                    (fn.cls, qn.rsplit(".", 1)[-1]), []).append(qn)
+        self.traced = self._reach(self._traced_roots())
+        self.step_loop = self._reach(self._seed_qualnames(STEP_SEEDS)) \
+            - self.traced
+
+    def _seed_qualnames(self, seeds) -> Set[str]:
+        out = set()
+        for s in seeds:
+            if s in self.functions:
+                out.add(s)
+        return out
+
+    def _traced_roots(self) -> Set[str]:
+        roots = {qn for qn, fn in self.functions.items() if fn.jit_root}
+        roots |= self._seed_qualnames(TRACED_SEEDS)
+        return roots
+
+    def _resolve(self, fn: FunctionInfo, call: tuple) -> List[str]:
+        ix = self.modules[fn.module]
+        kind = call[0]
+        if kind in ("name", "jitname"):
+            name = call[1]
+            # nested def in the same enclosing function first
+            nested = f"{fn.qualname}.{name}"
+            if nested in self.functions:
+                return [nested]
+            local = f"{fn.module}.{name}"
+            if local in self.functions:
+                return [local]
+            tgt = ix.from_imports.get(name)
+            if tgt and tgt in self.functions:
+                return [tgt]
+            return []
+        if kind == "self":
+            return self._methods.get((fn.cls, call[1]), []) \
+                if fn.cls else []
+        if kind == "mod":
+            mod = ix.imports.get(call[1])
+            if mod:
+                tgt = f"{mod}.{call[2]}"
+                return [tgt] if tgt in self.functions else []
+            # `from repro.x import y` then `y.f(...)`
+            tgt = ix.from_imports.get(call[1])
+            if tgt:
+                full = f"{tgt}.{call[2]}"
+                return [full] if full in self.functions else []
+            return []
+        return []
+
+    def _reach(self, roots: Set[str]) -> Set[str]:
+        seen = set(roots)
+        frontier = list(roots)
+        while frontier:
+            qn = frontier.pop()
+            fn = self.functions.get(qn)
+            if fn is None:
+                continue
+            for call in fn.calls:
+                for tgt in self._resolve(fn, call):
+                    if tgt not in seen:
+                        seen.add(tgt)
+                        frontier.append(tgt)
+        return seen
+
+
+def load_package(root: str, package: str = "repro") -> PackageGraph:
+    """Parse every ``*.py`` under ``root``.
+
+    ``root`` may be the package dir itself (``src/repro``) or its parent
+    source root (``src``) — both yield ``repro.*`` module names."""
+    root = os.path.abspath(root)
+    if os.path.isdir(os.path.join(root, package)):  # src -> src/repro
+        root = os.path.join(root, package)
+    indexes = []
+    repo = os.path.dirname(os.path.dirname(root))   # src/repro -> repo
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, root)
+            parts = [package] + rel[:-3].split(os.sep)
+            if parts[-1] == "__init__":
+                parts = parts[:-1]
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+            indexes.append(_ModuleIndex(
+                ".".join(parts), os.path.relpath(path, repo),
+                ast.parse(source, filename=path), source))
+    return PackageGraph(indexes)
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+def _sync_kind(ix: _ModuleIndex, node: ast.Call) -> Optional[str]:
+    """Classify one call as a host-sync form, or None."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        if f.attr in ("item", "tolist", "block_until_ready") and \
+                not node.args:
+            return f.attr
+        d = ix.dotted(f)
+        if d is None:
+            return None
+        head = d.split(".")[0]
+        mod = ix.imports.get(head, head)
+        if d.endswith(".device_get") and mod.startswith("jax"):
+            return "device_get"
+        if f.attr in ("asarray", "array") and mod == "numpy":
+            return "np.asarray"
+        return None
+    if isinstance(f, ast.Name):
+        if f.id == "device_get" and \
+                ix.from_imports.get("device_get", "").startswith("jax"):
+            return "device_get"
+        if f.id in ("int", "float", "bool") and len(node.args) == 1 and \
+                not isinstance(node.args[0], ast.Constant):
+            return f"{f.id}()"
+    return None
+
+
+def _rng_kind(ix: _ModuleIndex, node: ast.Call) -> Optional[str]:
+    d = ix.dotted(node.func)
+    if d is None:
+        return None
+    head = d.split(".")[0]
+    mod = ix.imports.get(head, ix.from_imports.get(head, head))
+    parts = d.split(".")
+    if mod == "random" or (len(parts) >= 2 and parts[0] == "random"):
+        return d if mod == "random" else None
+    if mod == "numpy" and len(parts) >= 3 and parts[1] == "random":
+        return d
+    if mod == "time" and parts[-1] in ("time", "perf_counter", "monotonic",
+                                       "sleep"):
+        return d
+    if mod == "datetime" and parts[-1] in ("now", "utcnow", "today"):
+        return d
+    return None
+
+
+def _waived(ix: _ModuleIndex, rule: str, line: int, def_line: int) -> bool:
+    for ln in (line, def_line):
+        if rule in ix.waivers.get(ln, set()):
+            return True
+    return False
+
+
+def _function_findings(graph: PackageGraph) -> List[Finding]:
+    out: List[Finding] = []
+    for qn, fn in sorted(graph.functions.items()):
+        ix = graph.modules[fn.module]
+        traced = qn in graph.traced
+        in_step = qn in graph.step_loop
+        symbol = qn[len(fn.module) + 1:] if qn.startswith(fn.module) else qn
+        counters: Dict[str, int] = {}
+        body = fn.node.body if isinstance(fn.node, ast.Lambda) \
+            else list(_body_statements(fn.node))
+        nodes = []
+        roots = [body] if isinstance(fn.node, ast.Lambda) else body
+        for stmt in roots:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            nodes.extend(_walk_no_defs(stmt))
+        for node in sorted((n for n in nodes if isinstance(n, ast.Call)),
+                           key=lambda n: (n.lineno, n.col_offset)):
+            kind = _sync_kind(ix, node)
+            if kind is not None:
+                i = counters.setdefault(f"sync:{kind}", 0)
+                counters[f"sync:{kind}"] += 1
+                detail = f"{kind}#{i}"
+                if traced:
+                    rule, sev = "host-sync", "error"
+                    msg = (f"{kind} in jit-traced {symbol} — a host sync / "
+                           f"tracer leak on the compiled hot path")
+                    sugg = ("keep device values on device inside traced "
+                            "code; move host reads outside the jit "
+                            "boundary")
+                elif in_step and kind in _SYNC_READ_KINDS:
+                    rule, sev = "step-sync", "warn"
+                    msg = (f"{kind} in engine step loop ({symbol}) — "
+                           f"scattered per-step device read")
+                    sugg = ("batch per-step reads into one "
+                            "Engine._device_read(...) pytree fetch")
+                else:
+                    rule, sev = "sync-site", "info"
+                    msg = f"{kind} in {symbol}: host-side OK"
+                    sugg = ""
+                if not _waived(ix, rule, node.lineno, fn.lineno):
+                    out.append(Finding(rule, fn.path, node.lineno, symbol,
+                                       detail, msg, sev, sugg))
+            rng = _rng_kind(ix, node) if traced else None
+            if rng is not None:
+                i = counters.setdefault(f"rng:{rng}", 0)
+                counters[f"rng:{rng}"] += 1
+                if not _waived(ix, "host-rng-under-trace", node.lineno,
+                               fn.lineno):
+                    out.append(Finding(
+                        "host-rng-under-trace", fn.path, node.lineno,
+                        symbol, f"{rng}#{i}",
+                        f"host {rng} under jit trace in {symbol} — value "
+                        f"is baked in at trace time",
+                        "error",
+                        "thread jax.random keys / pass times in as "
+                        "arguments"))
+        out.extend(_mutable_default_findings(ix, fn, symbol))
+        out.extend(_jit_static_findings(graph, ix, fn, symbol))
+        out.extend(_allocator_findings(ix, fn, symbol))
+    return out
+
+
+def _mutable_default_findings(ix, fn, symbol) -> List[Finding]:
+    node = fn.node
+    if isinstance(node, ast.Lambda) or not hasattr(node, "args"):
+        return []
+    out = []
+    defaults = list(node.args.defaults) + \
+        [d for d in node.args.kw_defaults if d is not None]
+    for i, d in enumerate(defaults):
+        if isinstance(d, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                          ast.DictComp, ast.SetComp)):
+            sev, msg = "error", "mutable default argument (shared across " \
+                "calls)"
+        elif isinstance(d, ast.Call):
+            callee = ix.dotted(d.func) or "<call>"
+            if callee in ("tuple", "frozenset"):
+                continue
+            sev = "warn"
+            msg = (f"call default `{callee}(...)` evaluated once at def "
+                   f"time and shared across calls")
+        else:
+            continue
+        if _waived(ix, "mutable-default", d.lineno, fn.lineno):
+            continue
+        out.append(Finding(
+            "mutable-default", fn.path, d.lineno, symbol, f"default#{i}",
+            f"{msg} in {symbol}", sev,
+            "default to None and construct in the body (or waive if the "
+            "shared object is immutable)"))
+    return out
+
+
+def _jit_static_findings(graph, ix, fn, symbol) -> List[Finding]:
+    out = []
+    counters: Dict[str, int] = {}
+    body = [fn.node.body] if isinstance(fn.node, ast.Lambda) else [
+        s for s in _body_statements(fn.node)
+        if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef))]
+    for stmt in body:
+        for node in _walk_no_defs(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            name = ix._target_name(node.func) if isinstance(
+                node.func, (ast.Name, ast.Attribute)) else None
+            if name is None:
+                continue
+            scope = fn.cls or fn.qualname
+            if (scope, name) not in ix.nonstatic_jits:
+                continue
+            bad = [a for a in node.args
+                   if isinstance(a, ast.Constant)
+                   and isinstance(a.value, (str, bool))]
+            bad += [k.value for k in node.keywords
+                    if isinstance(k.value, ast.Constant)
+                    and isinstance(k.value.value, (str, bool))]
+            if not bad:
+                continue
+            i = counters.setdefault(name, 0)
+            counters[name] += 1
+            if _waived(ix, "jit-static-args", node.lineno, fn.lineno):
+                continue
+            out.append(Finding(
+                "jit-static-args", fn.path, node.lineno, symbol,
+                f"{name}#{i}",
+                f"{name} is jitted without static_argnames but called "
+                f"with a str/bool literal — every distinct value "
+                f"retraces", "error",
+                "declare the argument in static_argnames (or hash it "
+                "into the closure)"))
+    return out
+
+
+def _allocator_findings(ix, fn, symbol) -> List[Finding]:
+    if os.path.basename(fn.path) == "kv_cache.py":
+        return []          # the allocator's own module manages refcounts
+    out = []
+    counters: Dict[str, int] = {}
+    body = [fn.node.body] if isinstance(fn.node, ast.Lambda) else [
+        s for s in _body_statements(fn.node)
+        if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef))]
+    for stmt in body:
+        for node in _walk_no_defs(stmt):
+            if not isinstance(node, ast.Call) or \
+                    not isinstance(node.func, ast.Attribute):
+                continue
+            if node.func.attr not in ("free", "restore"):
+                continue
+            recv = ix.dotted(node.func.value) or ""
+            leaf = recv.split(".")[-1] if recv else ""
+            if leaf not in ("allocator", "alloc"):
+                continue
+            key = f"{leaf}.{node.func.attr}"
+            i = counters.setdefault(key, 0)
+            counters[key] += 1
+            if _waived(ix, "allocator-free", node.lineno, fn.lineno):
+                continue
+            out.append(Finding(
+                "allocator-free", fn.path, node.lineno, symbol,
+                f"{key}#{i}",
+                f"raw {key}(...) in {symbol}: pages may be refcounted / "
+                f"prefix-shared — bypassing the page-table release path "
+                f"corrupts shared pages", "error",
+                "release through PageTable.release/trim (or decref and "
+                "let the owner decide free-list vs prefix LRU)"))
+    return out
+
+
+def run_ast_lint(src_root: str) -> Tuple[List[Finding], PackageGraph]:
+    """Lint the package rooted at ``src_root`` (``.../src/repro``).
+
+    Returns (findings, graph). Gating findings are error/warn; ``info``
+    findings classify the remaining host-side-OK sync sites."""
+    graph = load_package(src_root)
+    return _function_findings(graph), graph

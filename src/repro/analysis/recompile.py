@@ -1,0 +1,160 @@
+"""Recompile guard: steady-state serving must not trace or compile.
+
+The engine's step loop is built so every step reuses a handful of
+compiled executables — decode and verify batches are padded to
+``num_slots`` lanes, prefill chunks to a static width, draft lookahead
+to ``k`` columns — which makes "no recompiles in steady state" a hard
+property, not a hope. This module checks it two ways:
+
+* :class:`CompileLog` captures XLA compile events via
+  ``jax.log_compiles`` (messages on the ``jax._src.dispatch`` logger),
+  catching BOTH jit retraces and eager-op churn (an eager op with a
+  fresh shape compiles a fresh executable — the log sees it even though
+  no jit cache grows);
+* :func:`compile_counts` reads each serving jit's ``_cache_size()``,
+  giving the per-(entry point, shape class) "compiled exactly once"
+  assertion — shape classes are things like greedy vs temperature
+  sampling batches (``temps=None`` is a distinct pytree structure).
+
+:func:`run_recompile_guard` drives an engine through a warmup workload,
+then a steady-state workload of the *same shape classes* inside a
+:class:`CompileLog`, and reports violations as
+:class:`~repro.analysis.findings.Finding` records (rule
+``recompile-steady`` / ``recompile-cache``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import re
+from typing import Dict, List, Optional
+
+from .findings import Finding
+
+_COMPILE_RE = re.compile(
+    r"Finished XLA compilation of jit\((?P<name>[^)]*)\)")
+
+#: loggers jax.log_compiles routes compile messages through
+_LOGGER_NAMES = ("jax._src.dispatch", "jax._src.interpreters.pxla")
+
+
+class _Capture(logging.Handler):
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.events: List[str] = []
+
+    def emit(self, record):
+        msg = record.getMessage()
+        m = _COMPILE_RE.search(msg)
+        if m:
+            self.events.append(m.group("name"))
+
+
+class CompileLog:
+    """Context manager recording every XLA compilation that finishes
+    inside the block.
+
+    >>> # doctest-style sketch (real use: tests/test_recompile_guard.py)
+    >>> # with CompileLog() as log:
+    >>> #     engine.run_until_idle()
+    >>> # assert log.events == []
+    """
+
+    def __init__(self):
+        self.events: List[str] = []
+        self._handler: Optional[_Capture] = None
+        self._ctx = None
+
+    def __enter__(self):
+        import jax
+        self._handler = _Capture()
+        self._propagate = {}
+        for name in _LOGGER_NAMES:
+            lg = logging.getLogger(name)
+            lg.addHandler(self._handler)
+            # capture quietly: don't spray compile logs over test output
+            self._propagate[name] = lg.propagate
+            lg.propagate = False
+        self._ctx = jax.log_compiles()
+        self._ctx.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        self._ctx.__exit__(*exc)
+        for name in _LOGGER_NAMES:
+            lg = logging.getLogger(name)
+            lg.removeHandler(self._handler)
+            lg.propagate = self._propagate[name]
+        self.events = self._handler.events
+        return False
+
+
+def compile_counts(engine) -> Dict[str, int]:
+    """``{entry point: compiled-trace count}`` for the engine's jits."""
+    out = {}
+    for name, fn in engine.jit_entry_points().items():
+        size = getattr(fn, "_cache_size", None)
+        out[name] = size() if size is not None else -1
+    return out
+
+
+@dataclasses.dataclass
+class GuardReport:
+    """Outcome of one guard run."""
+    warmup_events: List[str]
+    steady_events: List[str]
+    counts: Dict[str, int]
+    findings: List[Finding]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def run_recompile_guard(engine, warmup_requests, steady_requests,
+                        expected_counts: Dict[str, int]) -> GuardReport:
+    """Drive ``engine`` through warmup then steady-state; assert the
+    steady phase compiles nothing and each jit's cache holds exactly
+    the expected number of shape classes.
+
+    Args:
+      engine: a fresh :class:`repro.serve.engine.Engine`.
+      warmup_requests / steady_requests: two request lists exercising
+        the SAME shape classes (the warmup pays every compile).
+      expected_counts: ``{entry point: shape classes}`` — e.g. decode
+        compiles once, sample twice when the workload mixes greedy and
+        temperature batches. Entry points the engine lacks (no drafter)
+        are skipped; listed entries must match ``_cache_size`` exactly.
+    """
+    with CompileLog() as warm:
+        for r in warmup_requests:
+            engine.submit(r)
+        engine.run_until_idle()
+    with CompileLog() as steady:
+        for r in steady_requests:
+            engine.submit(r)
+        engine.run_until_idle()
+
+    findings: List[Finding] = []
+    if steady.events:
+        findings.append(Finding(
+            "recompile-steady", "", 0, "engine.run_until_idle",
+            "steady-compiles",
+            f"{len(steady.events)} XLA compilation(s) in steady state "
+            f"(shape churn): {sorted(set(steady.events))}", "error",
+            "pad step inputs to the static batch/chunk shapes; check "
+            "weak-type or pytree-structure flips between steps"))
+    counts = compile_counts(engine)
+    for name, want in expected_counts.items():
+        got = counts.get(name)
+        if got is None:
+            continue
+        if got != want:
+            findings.append(Finding(
+                "recompile-cache", "", 0, name, "cache-size",
+                f"{name}: {got} compiled shape class(es), expected "
+                f"exactly {want}", "error",
+                "a retrace added a shape class (or an expected class "
+                "never ran) — diff the workload against docs/analysis.md "
+                "§Recompile guard"))
+    return GuardReport(warm.events, steady.events, counts, findings)

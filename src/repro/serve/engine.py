@@ -112,6 +112,13 @@ class DegradationPolicy:
         return max(up, min(current, down))
 
 
+#: Default degradation ladder. Hoisted to a module constant (the
+#: dataclass is frozen, so sharing one instance across engines is safe)
+#: rather than constructed in the signature — a call in a default arg
+#: trips the mutable-default lint and hides construction cost at import.
+DEFAULT_DEGRADATION = DegradationPolicy()
+
+
 def _i32(x) -> jax.Array:
     return jnp.asarray(x, jnp.int32)
 
@@ -219,7 +226,7 @@ class Engine:
                  spec_decode: Optional[SpecConfig] = None,
                  max_queue: Optional[int] = None,
                  degradation: Optional[DegradationPolicy]
-                 = DegradationPolicy()):
+                 = DEFAULT_DEGRADATION):
         self.model = model
         self.params = params
         self.qc = qc
@@ -278,6 +285,20 @@ class Engine:
                 donate_argnums=(2,))
         else:
             self._init_sharded(mesh)
+
+        # Batch sampling runs JITTED so a steady-state decode step is
+        # exactly two compiled calls (decode + sample) and ONE host
+        # transfer — the (num_slots,) token vector through _device_read.
+        # slot_ids is the full lane range, closed over as a static
+        # constant; greedy (temps=None) and temperature batches are two
+        # shape classes of the same jit.
+        nslots = self.num_slots
+        self._jit_sample = jax.jit(
+            lambda key, logits, temps: _sample_tokens(
+                key, logits, temps, range(nslots)))
+        # Host-transfer accounting: every per-step device->host read in
+        # the serving loop goes through _device_read, which bumps this.
+        self.device_reads = 0
 
         # Speculative decoding (docs/speculative.md): draft cheap, verify
         # with the target in one multi-token call, roll back rejections.
@@ -350,6 +371,22 @@ class Engine:
             return contextlib.nullcontext()
         from repro.launch.mesh import mesh_context
         return mesh_context(self.mesh)
+
+    # ------------------------------------------------------------------
+    # host transfers
+    # ------------------------------------------------------------------
+    def _device_read(self, tree):
+        """THE device->host funnel for the step loop.
+
+        Every per-step read crosses here as one ``jax.device_get`` of a
+        small pytree (token ids, argmax ids, optionally logits) instead
+        of scattered ``.item()`` / ``np.asarray`` syncs — so a decode
+        step costs exactly one transfer and ``device_reads`` counts them
+        for the regression tests (test_recompile_guard.py). This is the
+        sanctioned sync point; the `analysis` linter flags any other
+        read reachable from the step loop."""
+        self.device_reads += 1
+        return jax.device_get(tree)  # analysis: ok(step-sync)
 
     # ------------------------------------------------------------------
     # sampling
@@ -464,6 +501,20 @@ class Engine:
                     raise RuntimeError(
                         f"engine made no progress in {stalled} steps "
                         f"({self.kv.occupancy()})")
+
+    def jit_entry_points(self) -> Dict[str, object]:
+        """Named jitted callables of the serving hot path.
+
+        The recompile guard (:mod:`repro.analysis.recompile`) reads each
+        one's ``_cache_size()`` to assert exactly one compile per
+        (entry point, shape class) across a mixed workload."""
+        eps = {"prefill": self._jit_prefill, "decode": self._jit_decode,
+               "verify": self._jit_verify, "sample": self._jit_sample}
+        for name in ("_draft_greedy", "_draft_probs"):
+            fn = getattr(self.drafter, name, None)
+            if fn is not None:
+                eps["draft" + name[len("_draft"):]] = fn
+        return eps
 
     @property
     def pressure(self) -> float:
@@ -597,7 +648,8 @@ class Engine:
         req = slot.req
         temps = (jnp.asarray([req.temperature], jnp.float32)
                  if req.temperature > 0.0 else None)
-        tok = int(self._sample(logits, temps, [slot.idx])[0])
+        tok = int(self._device_read(
+            self._sample(logits, temps, [slot.idx]))[0])
         self.scheduler.finish_prefill(slot, tok)
         self._record_token(slot, tok)
 
@@ -647,7 +699,8 @@ class Engine:
                 self.params, jnp.asarray(toks), self.kv.data,
                 self.kv.table_device(self._table_sharding),
                 jnp.asarray(positions))
-        nxt = np.asarray(self._sample(logits, temps, range(b)))
+            self.key, nxt_dev = self._jit_sample(self.key, logits, temps)
+        nxt = self._device_read(nxt_dev)
         for s in dslots:
             s.pos += 1
             self._record_token(s, int(nxt[s.idx]))
@@ -727,10 +780,11 @@ class Engine:
                 self.kv.table_device(self._table_sharding),
                 jnp.asarray(posv), jnp.asarray(nlive))
         # all-greedy rounds pull only the (B, k+1) argmax ids; the full
-        # logits tensor crosses to the host only for rejection sampling
-        ids_h = np.asarray(ids)
-        lg = np.asarray(logits) if any(
-            s.req.temperature > 0.0 for s in dslots) else None
+        # logits tensor rides the SAME single transfer only when a
+        # temperature slot needs distributions for rejection sampling
+        need_q = any(s.req.temperature > 0.0 for s in dslots)
+        got = self._device_read((ids, logits) if need_q else (ids,))
+        ids_h, lg = got[0], (got[1] if need_q else None)
         self.spec_rounds += 1
         for s in dslots:
             n = int(n_prop[s.idx])

@@ -294,7 +294,11 @@ class FaultInjector:
         table = kv.table
         if table.prefix is not None:
             while table.prefix.reclaimable:
-                table.allocator.restore(table.prefix.pop_lru())
+                # deliberate raw-allocator use: fault injection reclaims
+                # parked refcount-0 prefix pages exactly like the real
+                # eviction path does (not a leaked decref)
+                table.allocator.restore(  # analysis: ok(allocator-free)
+                    table.prefix.pop_lru())
         held = table.allocator.alloc(table.allocator.available)
         self._held_pages[i] = held
         self._log(fault, f"holding {len(held)} page(s)")

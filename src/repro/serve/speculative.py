@@ -354,15 +354,18 @@ class ModelDrafter(Drafter):
                 engine.kv.table_device(engine._table_sharding),
                 jnp.asarray(first), jnp.asarray(posv),
                 jnp.asarray(n_prop), jnp.asarray(temps), sub)
-        q_rows: Optional[List[np.ndarray]] = None
+        qp = None
         with engine._mesh_scope():
             if need_q:
                 g, qp, engine.kv.data = self._draft_probs(*args)
-                q_rows = list(np.asarray(qp))
             else:                  # all-greedy: no draft-prob work at all
                 g, engine.kv.data = self._draft_greedy(*args)
-        g = np.asarray(g).T.copy()         # (B, k)
-        return g, n_prop, q_rows
+        # one batched transfer for the whole round: draft ids, plus the
+        # per-step draft probabilities only when rejection sampling
+        # actually needs them
+        got = engine._device_read((g, qp) if need_q else (g,))
+        q_rows = list(got[1]) if need_q else None
+        return got[0].T.copy(), n_prop, q_rows  # (B, k)
 
 
 class NgramDrafter(Drafter):

@@ -1,0 +1,112 @@
+"""Recompile guard over the serving hot path (ISSUE 8, slow job).
+
+Asserts the property the engine's static-shape design promises:
+steady-state decode, speculative draft/verify rounds, and chunked
+prefill each compile EXACTLY once per (entry point, shape class) —
+a warmup workload pays every compile, an identically-shaped steady
+workload must pay none — and that the `_device_read` funnel keeps
+host transfers at one per decode step / at most two per spec round."""
+import jax
+import pytest
+
+from repro.analysis.recompile import CompileLog, run_recompile_guard
+from repro.configs import get_smoke_config
+from repro.core.lut import DENSE
+from repro.models.model import Model
+from repro.serve.engine import Engine, Request
+from repro.serve.speculative import SpecConfig
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+    m = Model(cfg)
+    return m, m.init(jax.random.PRNGKey(0), DENSE)
+
+
+def _mk_engine(m, params, **kw):
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 4)
+    return Engine(m, params, DENSE, batch_size=2, **kw)
+
+
+def _mixed(base):
+    """Chunked prefill (6-token prompt over 4-wide chunks), short and
+    long greedy decodes, and a temperature slot — one instance of every
+    shape class the plain engine can hit."""
+    return [Request(tokens=[base, base + 1, base + 2], max_new_tokens=4),
+            Request(tokens=[base + 3] * 6, max_new_tokens=3),
+            Request(tokens=[base + 4, base + 5], max_new_tokens=2,
+                    temperature=0.7)]
+
+
+def test_plain_engine_one_compile_per_shape_class(qwen):
+    m, params = qwen
+    eng = _mk_engine(m, params)
+    report = run_recompile_guard(
+        eng, _mixed(3), _mixed(11),
+        # greedy + temperature sampling batches are two pytree classes
+        # of the sample jit; verify never runs without spec_decode
+        expected_counts={"prefill": 1, "decode": 1, "verify": 0,
+                         "sample": 2})
+    assert report.ok, "\n".join(f.render() for f in report.findings)
+    assert report.steady_events == []
+    assert report.warmup_events       # warmup really did the compiling
+
+
+def test_spec_engine_one_compile_per_shape_class(qwen):
+    m, params = qwen
+
+    def reqs(base):
+        return [Request(tokens=[base, base + 1, base + 2],
+                        max_new_tokens=5),
+                Request(tokens=[base + 3, base + 4], max_new_tokens=4)]
+
+    eng = _mk_engine(m, params, spec_decode=SpecConfig(k=3))
+    report = run_recompile_guard(
+        eng, reqs(3), reqs(9),
+        # all-greedy: the probs draft head and rejection sampling never
+        # trace; verify + greedy draft compile exactly once
+        expected_counts={"prefill": 1, "decode": 0, "verify": 1,
+                         "sample": 0, "draft_greedy": 1,
+                         "draft_probs": 0})
+    assert report.ok, "\n".join(f.render() for f in report.findings)
+    assert eng.spec_rounds > 0
+
+
+def test_decode_step_is_one_device_read(qwen):
+    """A greedy request costs exactly one host transfer per emitted
+    token: the final prefill chunk's sample plus one per decode step."""
+    m, params = qwen
+    eng = _mk_engine(m, params)
+    eng.run([Request(tokens=[3, 4, 5], max_new_tokens=6)])
+    assert eng.device_reads == 6
+
+
+def test_spec_round_is_at_most_two_device_reads(qwen):
+    """One batched propose fetch + one batched verify fetch per round
+    (all-greedy: the verify fetch is argmax ids only), plus one read per
+    request for its final prefill chunk."""
+    m, params = qwen
+    eng = _mk_engine(m, params, spec_decode=SpecConfig(k=3))
+    reqs = [Request(tokens=[3, 4, 5], max_new_tokens=5),
+            Request(tokens=[6, 7], max_new_tokens=4)]
+    eng.run(reqs)
+    assert eng.spec_rounds > 0
+    assert eng.device_reads == len(reqs) + 2 * eng.spec_rounds
+
+
+def test_compile_log_captures_fresh_shapes():
+    """CompileLog sees eager-op churn, not just jit retraces."""
+    import jax.numpy as jnp
+    with CompileLog() as warm:
+        (jnp.ones((3, 3)) * 2.0).block_until_ready()
+    with CompileLog() as steady:
+        (jnp.ones((3, 3)) * 4.0).block_until_ready()   # same shape: cached
+    with CompileLog() as churn:
+        (jnp.ones((5, 5)) * 2.0).block_until_ready()   # fresh shape
+    assert steady.events == []
+    assert warm.events or churn.events
