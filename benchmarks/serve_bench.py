@@ -57,6 +57,15 @@ token-identical; ``--smoke`` additionally asserts the flash row wins
 tokens/s (>= 1.0x floor; typical CPU margin is ~1.3x — the dense view
 re-materialises ~25MB/step that the flash path never touches).
 
+``--kvq`` adds the vector-quantized KV-page rows (docs/serving.md
+§KV-cache quantization): an fp-pool engine and a ``kv_quant="vq"`` engine
+(uint8 codebook indices in the pages, codebook fit from a calibration
+prefill) are compared on measured HBM bytes per cached token and on the
+number of full-length sequences resident in ONE pool byte budget — and
+the quantized capacity is demonstrated by decoding that many requests
+concurrently to completion (``--smoke`` asserts >= 4x bytes/token and
+>= 2x resident sequences; typical at v=4/c=16 on the fp32 pool is 16x).
+
 ``--snapshot PATH`` (or ``auto``) writes every emitted row plus run
 metadata to a ``BENCH_serve.json`` perf snapshot — the on-disk trajectory
 for ROADMAP item 5.
@@ -380,9 +389,104 @@ def longctx_bench(smoke: bool, ctx: int = 8192, slots: int = 2,
     return ratio
 
 
+def kvq_bench(slots: int, smoke: bool) -> float:
+    """Vector-quantized KV pages A/B (docs/serving.md §KV-cache quantization).
+
+    Two engines on the same smoke model: an fp pool and a ``kv_quant="vq"``
+    pool whose pages hold uint8 codebook indices (the engine fits the
+    codebook from a calibration prefill at construction). The row reports
+    the measured HBM bytes one cached token pins (from the actual pool
+    arrays, so dtype/layout changes show up) and the resident-sequence
+    capacity both pools reach under ONE byte budget — the fp engine's pool.
+    The quantized capacity is then *demonstrated*, not just computed: a
+    batch of full-length requests equal to the fp pool's capacity times
+    >=2 runs concurrently to completion inside that same budget, with the
+    peak decode concurrency checked against the batch size.
+
+    Returns the capacity ratio (``--smoke`` asserts bytes/token >= 4x and
+    capacity >= 2x; typical at v=4/c=16 on the fp32 smoke pool is 16x).
+    """
+    cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0), DENSE)
+    KVQ = DENSE.replace(kv_quant="vq")
+    ps, max_seq, chunk = 8, 32, 4
+    prompt_len, n_new = 4, 20
+    need = prompt_len + n_new                  # tokens a request pins
+    pages_per_req = -(-need // ps)
+
+    # fp engine: pool sized so exactly two full requests fit resident
+    # (plus one spare page so allocation is not knife-edge) — the byte
+    # budget every other number in this row is measured against.
+    fp = Engine(model, params, DENSE, batch_size=slots, max_seq=max_seq,
+                page_size=ps, prefill_chunk=chunk, prefix_cache=False,
+                num_pages=2 * pages_per_req + 1)
+    budget = fp.kv.pool_bytes
+    cap_fp = budget // (pages_per_req * fp.kv.page_bytes)
+
+    # quantized engine under the SAME byte budget: every fp page's bytes
+    # buy `bytes_per_token` ratio more code pages.
+    probe = Engine(model, params, KVQ, batch_size=1, max_seq=max_seq,
+                   page_size=ps, prefill_chunk=chunk, prefix_cache=False)
+    bpt_fp, bpt_q = fp.kv.bytes_per_token, probe.kv.bytes_per_token
+    nq = budget // probe.kv.page_bytes
+    cap_q = budget // (pages_per_req * probe.kv.page_bytes)
+    cap_used = min(cap_q, 4 * slots)
+    kvq = Engine(model, params, KVQ, batch_size=cap_used, max_seq=max_seq,
+                 page_size=ps, prefill_chunk=chunk, prefix_cache=False,
+                 num_pages=nq, kv_codebook=probe.kv_codebook)
+    assert kvq.kv.pool_bytes <= budget, (
+        f"kvq pool {kvq.kv.pool_bytes}B exceeds the fp byte budget "
+        f"{budget}B")
+
+    # demonstrate the capacity: cap_used identical full-length requests,
+    # all resident at once, to completion.
+    reqs = [Request(tokens=[(7 * i + j) % 50 + 2
+                            for j in range(prompt_len)],
+                    max_new_tokens=n_new) for i in range(cap_used)]
+    peak, t0 = 0, time.perf_counter()
+    for r in reqs:
+        kvq.submit(r)
+    while kvq.scheduler.has_work:
+        kvq.step()
+        peak = max(peak, len(kvq.scheduler.decode_slots()))
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in reqs)
+    assert all(r.done and len(r.out_tokens) == r.max_new_tokens
+               for r in reqs), "kvq: incomplete requests"
+    assert peak == cap_used, (
+        f"kvq: only {peak}/{cap_used} sequences decoded concurrently — "
+        f"the capacity claim did not hold on the pool")
+
+    bytes_ratio = bpt_fp / bpt_q
+    cap_ratio = cap_q / max(cap_fp, 1)
+    cb = kvq.kv_codebook
+    emit("serve.kvq.bytes_per_tok", bpt_q,
+         f"fp {bpt_fp}B -> vq {bpt_q}B ({bytes_ratio:.1f}x smaller; "
+         f"v={cb.v} c={cb.c}, {cb.equivalent_bits:.1f} eq-bits)")
+    emit("serve.kvq.resident_seqs_per_pool", cap_q,
+         f"{cap_q} vs fp {cap_fp} full {need}-token seqs in the same "
+         f"{budget}B pool ({cap_ratio:.1f}x); {peak} demonstrated live")
+    emit("serve.kvq.us_per_tok", dt / max(toks, 1) * 1e6,
+         f"tok/s={toks / dt:.1f} at {peak} concurrent quantized slots")
+    print(f"kvq: {bpt_fp}B -> {bpt_q}B per cached token "
+          f"({bytes_ratio:.1f}x), {cap_q} vs {cap_fp} resident seqs in a "
+          f"{budget}B pool ({cap_ratio:.1f}x), {peak} run live")
+    if smoke:
+        assert bytes_ratio >= 4.0, (
+            f"vq KV pages must cut bytes/token >= 4x, got "
+            f"{bytes_ratio:.2f}x")
+        assert cap_ratio >= 2.0, (
+            f"vq KV pages must hold >= 2x the concurrent sequences at a "
+            f"fixed pool byte budget, got {cap_ratio:.2f}x")
+        print(f"kvq smoke check OK (>= 4x bytes/token, >= 2x resident "
+              f"sequences, {peak} decoded concurrently)")
+    return cap_ratio
+
+
 def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
           sharded: bool = False, devices: int = 0, spec: bool = False,
-          chaos: bool = False, longctx: bool = False):
+          chaos: bool = False, longctx: bool = False, kvq: bool = False):
     cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0), DENSE)
@@ -458,6 +562,9 @@ def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
     # 8k-context decode A/B (flash page-table decode vs gather)
     if longctx:
         longctx_bench(smoke)
+    # vector-quantized KV pages: bytes/token + fixed-pool capacity rows
+    if kvq:
+        kvq_bench(slots, smoke)
     return ratio
 
 
@@ -483,6 +590,11 @@ def main():
                     help="add the 8k-context decode A/B: flash page-table "
                          "decode vs the gather path (with --smoke, asserts "
                          "token-identical chains and >= 1.0x tokens/s)")
+    ap.add_argument("--kvq", action="store_true",
+                    help="add the vector-quantized KV-page rows: measured "
+                         "bytes/token and resident-sequence capacity at a "
+                         "fixed pool byte budget (with --smoke, asserts "
+                         ">= 4x bytes/token and >= 2x capacity)")
     ap.add_argument("--snapshot", default="",
                     help="write a BENCH_serve.json perf snapshot to this "
                          "path ('auto' = repo root)")
@@ -506,7 +618,7 @@ def main():
                             f"{args.devices}").strip()
         os.execve(sys.executable, [sys.executable] + sys.argv, env)
     bench(args.slots, args.requests, args.max_seq, args.smoke, args.sharded,
-          args.devices, args.spec, args.chaos, args.longctx)
+          args.devices, args.spec, args.chaos, args.longctx, args.kvq)
     if args.snapshot:
         path = args.snapshot
         if path == "auto":
@@ -516,7 +628,8 @@ def main():
                  smoke=args.smoke, slots=args.slots,
                  requests=args.requests, max_seq=args.max_seq,
                  sharded=bool(args.sharded), spec=bool(args.spec),
-                 chaos=bool(args.chaos), longctx=bool(args.longctx))
+                 chaos=bool(args.chaos), longctx=bool(args.longctx),
+                 kvq=bool(args.kvq))
 
 
 if __name__ == "__main__":

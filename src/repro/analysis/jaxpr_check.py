@@ -35,6 +35,24 @@ Budgets (empirical on the qwen smoke fixture, asserted exact-or-under):
   verify_paged                         4     embed + view(k,v) + rows
   vq_amm (ref & fused)                 0     LUT path is gather-free
   ================================  =======  =============================
+
+Quantized-pool (``kv_quant="vq"``) variants — the pool gathers move
+uint8 CODES (``nc`` bytes/token/head), never fp rows; the ref/pallas
+flash impls replace the centroid lookup with one-hot contractions, so
+only the legacy gather path pays decode gathers (the tiny ``z`` tables):
+
+  ================================  =======  =============================
+  flash_decode/kvq-pallas              1     self-term fold (codes DMAed)
+  flash_decode/kvq-ref                 3     2 code gathers + self-term
+  decode_paged/kvq-pallas              3     same as fp — codes add none
+  decode_paged/kvq-ref                 5     + 2 code gathers, - score
+  decode_paged/kvq-gather              7     code gathers + z decodes
+  prefill_paged/kvq                    6     view decodes via z gathers
+  verify_paged/kvq                     6     view decodes via z gathers
+  ================================  =======  =============================
+
+KVQ donation expects >= 6 aliases: k + v pools AND the four codebook
+leaves must all pass through the serving jits in place.
 """
 from __future__ import annotations
 
@@ -205,10 +223,36 @@ def _serve_fixture():
     return fix
 
 
-def _decode_entry(flash: str):
+def _kvq_fixture():
+    """The serve fixture re-based on a vector-quantized page pool."""
+    if "kvq" in _FIXTURE_CACHE:
+        return _FIXTURE_CACHE["kvq"]
+    import jax
+    from repro.core.kv_codebook import KVCodebook
+    from repro.serve import PageTable
+    fx = dict(_serve_fixture())
+    m = fx["model"]
+    cfg = m.cfg
+    key = jax.random.PRNGKey(1)
+    rows = jax.random.normal(
+        key, (cfg.num_layers, 24, cfg.num_kv_heads, cfg.head_dim))
+    cb = KVCodebook.fit(rows, rows + 0.1, v=4, c=16, iters=2)
+    slots, max_seq, ps = 2, 32, 8
+    pt = PageTable(num_slots=slots, max_seq=max_seq, page_size=ps)
+    for s in range(slots):
+        pt.ensure(s, 20)
+    fx["kv"] = m.init_paged_cache(slots, max_seq, ps,
+                                  pt.allocator.num_pages, codebook=cb)
+    fx["table"] = pt.device()
+    _FIXTURE_CACHE["kvq"] = fx
+    return fx
+
+
+def _decode_entry(flash: str, kvq: bool = False):
     def build():
-        fx = _serve_fixture()
-        m, qc = fx["model"], fx["DENSE"].replace(flash=flash)
+        fx = _kvq_fixture() if kvq else _serve_fixture()
+        m, qc = fx["model"], fx["DENSE"].replace(
+            flash=flash, kv_quant="vq" if kvq else "none")
 
         def fn(p, t, kv, pt, po):
             return m.decode_paged(p, t, kv, pt, po, qc)
@@ -217,41 +261,55 @@ def _decode_entry(flash: str):
     return build
 
 
-def _prefill_entry():
-    import jax.numpy as jnp
-    fx = _serve_fixture()
-    m, qc = fx["model"], fx["DENSE"]
+def _prefill_entry(kvq: bool = False):
+    def build():
+        import jax.numpy as jnp
+        fx = _kvq_fixture() if kvq else _serve_fixture()
+        m = fx["model"]
+        qc = fx["DENSE"].replace(kv_quant="vq" if kvq else "none")
 
-    def fn(p, t, kv, pt, s, po, v):
-        return m.prefill_paged(p, t, kv, pt, s, po, v, qc)
-    return fn, (fx["params"], fx["ptoks"], fx["kv"], fx["table"],
-                jnp.int32(0), jnp.int32(0), jnp.int32(8))
-
-
-def _verify_entry():
-    fx = _serve_fixture()
-    m, qc = fx["model"], fx["DENSE"]
-
-    def fn(p, t, kv, pt, po, nl):
-        return m.verify_paged(p, t, kv, pt, po, nl, qc)
-    return fn, (fx["params"], fx["vtoks"], fx["kv"], fx["table"],
-                fx["pos"], fx["nlive"])
+        def fn(p, t, kv, pt, s, po, v):
+            return m.prefill_paged(p, t, kv, pt, s, po, v, qc)
+        return fn, (fx["params"], fx["ptoks"], fx["kv"], fx["table"],
+                    jnp.int32(0), jnp.int32(0), jnp.int32(8))
+    return build
 
 
-def _flash_entry(impl: str):
+def _verify_entry(kvq: bool = False):
+    def build():
+        fx = _kvq_fixture() if kvq else _serve_fixture()
+        m = fx["model"]
+        qc = fx["DENSE"].replace(kv_quant="vq" if kvq else "none")
+
+        def fn(p, t, kv, pt, po, nl):
+            return m.verify_paged(p, t, kv, pt, po, nl, qc)
+        return fn, (fx["params"], fx["vtoks"], fx["kv"], fx["table"],
+                    fx["pos"], fx["nlive"])
+    return build
+
+
+def _flash_entry(impl: str, kvq: bool = False):
     def build():
         import jax.numpy as jnp
         from repro.kernels.flash_decode import flash_decode_paged
         b, kvh, g, d, np_, ps = 2, 2, 2, 16, 4, 8
+        nc = 4
         q = jnp.ones((b, 1, kvh * g, d))
-        kp = jnp.ones((np_ + 1, ps, kvh, d))
+        if kvq:
+            kp = jnp.ones((np_ + 1, ps, kvh, nc), jnp.uint8)
+            cb = {"zk": jnp.ones((nc, 16, 4)), "zv": jnp.ones((nc, 16, 4)),
+                  "sk": jnp.ones((kvh,)), "sv": jnp.ones((kvh,))}
+        else:
+            kp = jnp.ones((np_ + 1, ps, kvh, d))
+            cb = None
         kn = jnp.ones((b, 1, kvh, d))
         phys = jnp.zeros((b, np_), jnp.int32)
         pos = jnp.asarray([5, 7], jnp.int32)
 
         def fn(q, kp, vp, kn, vn, phys, pos):
             return flash_decode_paged(q, kp, vp, kn, vn, phys, pos,
-                                      impl=impl, interpret=True)
+                                      impl=impl, codebook=cb,
+                                      interpret=True)
         return fn, (q, kp, kp, kn, kn, phys, pos)
     return build
 
@@ -280,9 +338,9 @@ def registry() -> List[EntryCheck]:
                    gather_budget=4, donate_argnums=(2,), min_aliases=2),
         EntryCheck("decode_paged/pallas", _decode_entry("pallas"),
                    gather_budget=3, donate_argnums=(2,), min_aliases=2),
-        EntryCheck("prefill_paged", _prefill_entry, gather_budget=4,
+        EntryCheck("prefill_paged", _prefill_entry(), gather_budget=4,
                    donate_argnums=(2,), min_aliases=2),
-        EntryCheck("verify_paged", _verify_entry, gather_budget=4,
+        EntryCheck("verify_paged", _verify_entry(), gather_budget=4,
                    donate_argnums=(2,), min_aliases=2),
         EntryCheck("flash_decode/ref", _flash_entry("ref"),
                    gather_budget=2),
@@ -291,6 +349,24 @@ def registry() -> List[EntryCheck]:
         EntryCheck("vq_amm/ref", _vq_amm_entry("ref"), gather_budget=0),
         EntryCheck("vq_amm/fused", _vq_amm_entry("fused"),
                    gather_budget=0),
+        # quantized-pool variants (budgets in the module docstring): the
+        # pools donate through unchanged, plus the 4 codebook leaves
+        EntryCheck("decode_paged/kvq-gather",
+                   _decode_entry("gather", kvq=True),
+                   gather_budget=7, donate_argnums=(2,), min_aliases=6),
+        EntryCheck("decode_paged/kvq-ref", _decode_entry("ref", kvq=True),
+                   gather_budget=5, donate_argnums=(2,), min_aliases=6),
+        EntryCheck("decode_paged/kvq-pallas",
+                   _decode_entry("pallas", kvq=True),
+                   gather_budget=3, donate_argnums=(2,), min_aliases=6),
+        EntryCheck("prefill_paged/kvq", _prefill_entry(kvq=True),
+                   gather_budget=6, donate_argnums=(2,), min_aliases=6),
+        EntryCheck("verify_paged/kvq", _verify_entry(kvq=True),
+                   gather_budget=6, donate_argnums=(2,), min_aliases=6),
+        EntryCheck("flash_decode/kvq-ref", _flash_entry("ref", kvq=True),
+                   gather_budget=3),
+        EntryCheck("flash_decode/kvq-pallas",
+                   _flash_entry("pallas", kvq=True), gather_budget=1),
     ]
 
 

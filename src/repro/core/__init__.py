@@ -1,5 +1,8 @@
 """repro.core — the paper's contribution: VQ-AMM / LUT-based GEMM + LUTBoost."""
 from .codebook import CodebookSpec, init_centroids, kmeans, kmeans_codebook
+from .kv_codebook import (CODEBOOK_KEY, KVCodebook, codebook_from_tree,
+                          kv_decode, kv_decode_stacked, kv_encode,
+                          kv_encode_stacked)
 from .lut import (DENSE, QuantConfig, build_lut, lut_linear_apply,
                   lut_linear_init, precompute_layer, quantize_lut_int8,
                   strip_for_inference)

@@ -1,0 +1,242 @@
+"""Vector-quantized KV-cache codebooks (ROADMAP item 2).
+
+The paper's VQ + LUT thesis applied to serving *state*: paged KV pages
+store per-subspace centroid indices (uint8, grouped over ``head_dim``)
+instead of fp rows, so HBM per live token drops ``4·head_dim / nc``×
+(fp32 pool → uint8 codes). A :class:`KVCodebook` holds one codebook per
+layer for K and one for V, plus per-layer/per-head RMS scales that
+normalise head magnitudes before assignment — one small ``(nc, c, v)``
+table then covers every head of the layer.
+
+Layout algebra (``nc = head_dim // v``, ``c <= 256`` so indices fit
+uint8):
+
+    fp row    (..., KVH, HD)   --encode-->   codes (..., KVH, nc) uint8
+    codes     (..., KVH, nc)   --decode-->   fp row (..., KVH, HD)
+
+    decode(codes)[..., h, s*v:(s+1)*v] = scale[h] * z[s, codes[..., h, s]]
+
+Encode is plain-L2 nearest-centroid assignment (the fused-kernel metric
+zoo is a weight-path concern; KV rows are smooth activations where L2 is
+the right default). Both directions are pure ``jnp`` and jit-safe — they
+run inside the engine's prefill/decode/verify steps, on the write path
+(encode) and inside the attention kernels (decode / LUT-accumulate, see
+``kernels/flash_decode.py``).
+
+Fitting reuses the LUTBoost k-means (:func:`repro.core.codebook.kmeans`
+via :func:`kmeans_codebook`), vmapped over layers, on calibration K/V
+rows harvested from a short prefill. :meth:`KVCodebook.from_rows` builds
+an *exact-cover* codebook (centroids = the row set, unit scales) — the
+lossless fixture the parity/identity tests key on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .codebook import CodebookSpec, kmeans_codebook
+
+#: pytree key carrying the codebook inside a quantized paged-cache dict —
+#: ``Model`` methods detect a quantized pool by its presence.
+CODEBOOK_KEY = "codebook"
+
+
+# ---------------------------------------------------------------------------
+# per-layer encode / decode (z (nc, c, v), scale (KVH,))
+# ---------------------------------------------------------------------------
+
+def kv_encode(rows: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    """Encode fp K/V rows to per-subspace centroid indices.
+
+    rows (..., KVH, HD) -> codes (..., KVH, nc) uint8. L2 assignment in
+    the scale-normalised space (the same space the codebook was fit in).
+    """
+    nc, c, v = z.shape
+    x = rows.astype(jnp.float32) / scale[:, None]
+    x = x.reshape(*rows.shape[:-1], nc, v)                 # (..., KVH, nc, v)
+    zf = z.astype(jnp.float32)
+    # batched MXU form of ||x - z||^2: ||x||^2 - 2<x,z> + ||z||^2
+    x2 = jnp.sum(x * x, axis=-1)[..., None]                # (..., nc, 1)
+    z2 = jnp.sum(zf * zf, axis=-1)                         # (nc, c)
+    xz = jnp.einsum("...sv,scv->...sc", x, zf,
+                    preferred_element_type=jnp.float32)
+    d = x2 - 2.0 * xz + z2
+    return jnp.argmin(d, axis=-1).astype(jnp.uint8)
+
+
+def kv_decode(codes: jax.Array, z: jax.Array, scale: jax.Array,
+              dtype=jnp.float32) -> jax.Array:
+    """Decode centroid indices back to fp rows.
+
+    codes (..., KVH, nc) uint8 -> rows (..., KVH, HD). One gather from
+    the tiny ``(nc, c, v)`` table — the pool itself stays uint8.
+    """
+    nc, c, v = z.shape
+    idx = codes.astype(jnp.int32)
+    sub = z[jnp.arange(nc), idx]                           # (..., KVH, nc, v)
+    rows = sub.reshape(*codes.shape[:-1], nc * v)
+    return (rows * scale[:, None]).astype(dtype)
+
+
+def kv_encode_stacked(rows: jax.Array, z: jax.Array,
+                      scale: jax.Array) -> jax.Array:
+    """:func:`kv_encode` over a leading layer axis: rows (L, ..., KVH, HD),
+    z (L, nc, c, v), scale (L, KVH) -> (L, ..., KVH, nc) uint8."""
+    return jax.vmap(kv_encode)(rows, z, scale)
+
+
+def kv_decode_stacked(codes: jax.Array, z: jax.Array, scale: jax.Array,
+                      dtype=jnp.float32) -> jax.Array:
+    """:func:`kv_decode` over a leading layer axis."""
+    return jax.vmap(lambda cd, zz, ss: kv_decode(cd, zz, ss, dtype))(
+        codes, z, scale)
+
+
+# ---------------------------------------------------------------------------
+# the codebook object (host-side; arrays ride the cache pytree)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KVCodebook:
+    """Per-layer K/V codebooks + per-layer/per-head scales.
+
+    zk/zv : (L, nc, c, v) float32 centroids (K / V streams fit separately
+            — their distributions differ materially after RoPE).
+    sk/sv : (L, KVH) float32 RMS scales dividing rows before assignment.
+    """
+    zk: jax.Array
+    zv: jax.Array
+    sk: jax.Array
+    sv: jax.Array
+
+    def __post_init__(self):
+        l, nc, c, v = self.zk.shape
+        if self.zv.shape != (l, nc, c, v):
+            raise ValueError(f"zk {self.zk.shape} vs zv {self.zv.shape}")
+        if self.sk.shape[0] != l or self.sk.shape != self.sv.shape:
+            raise ValueError(f"scale shapes {self.sk.shape}/{self.sv.shape} "
+                             f"do not match zk {self.zk.shape}")
+        if c > 256:
+            raise ValueError(f"c={c} does not fit uint8 codes")
+
+    # -- shape algebra ------------------------------------------------------
+    @property
+    def num_layers(self) -> int:
+        return self.zk.shape[0]
+
+    @property
+    def nc(self) -> int:
+        return self.zk.shape[1]
+
+    @property
+    def c(self) -> int:
+        return self.zk.shape[2]
+
+    @property
+    def v(self) -> int:
+        return self.zk.shape[3]
+
+    @property
+    def head_dim(self) -> int:
+        return self.nc * self.v
+
+    @property
+    def bytes_per_token_per_kv_head(self) -> int:
+        """uint8 codes per token per kv head for ONE of K/V."""
+        return self.nc
+
+    @property
+    def equivalent_bits(self) -> float:
+        """Paper Table V metric for the KV operating point."""
+        return CodebookSpec(v=self.v, c=self.c).equivalent_bits
+
+    def tree(self) -> Dict[str, jax.Array]:
+        """The device pytree embedded in the paged cache under
+        :data:`CODEBOOK_KEY` (leading L axis on every leaf so the model's
+        per-layer cache slicing applies uniformly)."""
+        return {"zk": self.zk, "zv": self.zv, "sk": self.sk, "sv": self.sv}
+
+    def fingerprint(self) -> int:
+        """64-bit content hash of the codebook — seeds the prefix-cache
+        hash chain so pages encoded under different codebooks can never
+        alias (the cache identifies *codes*, and codes are only
+        comparable under the same codebook)."""
+        import numpy as np
+        h = 0
+        for leaf in (self.zk, self.zv, self.sk, self.sv):
+            h = hash((h, np.asarray(leaf).tobytes()))
+        return h
+
+    # -- host-side convenience wrappers (tests / harnesses) ----------------
+    def encode(self, rows: jax.Array, which: str = "k") -> jax.Array:
+        z, s = (self.zk, self.sk) if which == "k" else (self.zv, self.sv)
+        return kv_encode_stacked(rows, z, s)
+
+    def decode(self, codes: jax.Array, which: str = "k",
+               dtype=jnp.float32) -> jax.Array:
+        z, s = (self.zk, self.sk) if which == "k" else (self.zv, self.sv)
+        return kv_decode_stacked(codes, z, s, dtype)
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def fit(cls, k_rows: jax.Array, v_rows: jax.Array, *, v: int = 4,
+            c: int = 16, iters: int = 8,
+            key: Optional[jax.Array] = None) -> "KVCodebook":
+        """K-means fit on calibration rows (L, T, KVH, HD).
+
+        Rows are RMS-normalised per (layer, kv-head) first, so one
+        ``(nc, c, v)`` table per layer covers heads with very different
+        magnitudes (post-RoPE K norms vary ~10x across heads)."""
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        l, _, kvh, hd = k_rows.shape
+        spec = CodebookSpec(v=v, c=c, metric="l2")
+        spec.num_subspaces(hd)        # validates v | head_dim
+        kk, kv_ = jax.random.split(key)
+
+        def one_stream(rows, key_s):
+            # rows (L, T, KVH, HD) -> scales (L, KVH), z (L, nc, c, v)
+            scale = jnp.sqrt(
+                jnp.mean(rows.astype(jnp.float32) ** 2, axis=(1, 3))) + 1e-6
+            xs = rows.astype(jnp.float32) / scale[:, None, :, None]
+            keys = jax.random.split(key_s, l)
+            z = jax.vmap(lambda x, kx: kmeans_codebook(
+                x, hd, spec, iters=iters, key=kx))(xs, keys)
+            return z, scale
+
+        zk, sk = one_stream(k_rows, kk)
+        zv, sv = one_stream(v_rows, kv_)
+        return cls(zk=zk, zv=zv, sk=sk, sv=sv)
+
+    @classmethod
+    def from_rows(cls, k_rows: jax.Array, v_rows: jax.Array) -> "KVCodebook":
+        """Exact-cover codebook: one subspace (v = head_dim), centroids =
+        the row set verbatim, unit scales.
+
+        Every row in ``k_rows``/``v_rows`` then round-trips BIT-IDENTICAL
+        through encode/decode (x/1.0 is x, and argmin lands on an exact
+        copy of x), which is what makes greedy token-identity testable on
+        a lossy path. Requires T*KVH <= 256 rows per layer."""
+        l, t, kvh, hd = k_rows.shape
+        n = t * kvh
+        if n > 256:
+            raise ValueError(f"exact-cover needs T*KVH <= 256, got {n}")
+
+        def pack(rows):
+            flat = rows.astype(jnp.float32).reshape(l, n, hd)
+            return flat[:, None, :, :]                     # (L, 1, c=n, v=hd)
+        # sk/sv must be DISTINCT buffers: the cache pytree they ride in is
+        # donated by the serving jits, and donating one buffer twice is an
+        # XLA error.
+        return cls(zk=pack(k_rows), zv=pack(v_rows),
+                   sk=jnp.ones((l, kvh), jnp.float32),
+                   sv=jnp.ones((l, kvh), jnp.float32))
+
+
+def codebook_from_tree(tree: Dict[str, jax.Array]) -> KVCodebook:
+    """Rebuild a :class:`KVCodebook` from its cache-pytree form."""
+    return KVCodebook(zk=tree["zk"], zv=tree["zv"],
+                      sk=tree["sk"], sv=tree["sv"])

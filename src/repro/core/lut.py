@@ -50,6 +50,20 @@ class QuantConfig:
     #                                ref | gather (auto = pallas on TPU,
     #                                gather elsewhere; see kernels/
     #                                flash_decode.py)
+    kv_quant: str = "none"         # paged KV pool: none (fp rows) | vq
+    #                                (pages store uint8 codebook indices;
+    #                                see core/kv_codebook.py + docs/
+    #                                serving.md §KV-cache quantization)
+    kv_v: int = 4                  # KV sub-vector length over head_dim
+    kv_c: int = 16                 # KV centroids per subspace (<= 256)
+
+    def __post_init__(self):
+        if self.kv_quant not in ("none", "vq"):
+            raise ValueError(
+                f"kv_quant must be 'none' or 'vq', got {self.kv_quant!r}")
+        if self.kv_quant == "vq" and self.kv_c > 256:
+            raise ValueError(
+                f"kv_c={self.kv_c} does not fit uint8 page codes")
 
     @property
     def spec(self) -> CodebookSpec:

@@ -227,6 +227,174 @@ def _splits_pallas(qg, k_pages, v_pages, phys, pos, win, ks,
 
 
 # ---------------------------------------------------------------------------
+# quantized-pool variants: pages hold uint8 codebook indices
+# (core/kv_codebook.py); fp K/V never exists in HBM — the kernel
+# dequantizes (or LUT-accumulates) in VMEM / registers.
+# ---------------------------------------------------------------------------
+
+def _deq_tile(codes, z, s):
+    """In-kernel dequant of one code tile via one-hot matmul (MXU form).
+
+    codes (ps, bh, nc) int32; z (nc, c, v) f32; s (bh,) f32 scales.
+    Returns fp K or V rows (bh, ps, nc*v) — never round-tripped to HBM.
+    """
+    ps_, bh, nc = codes.shape
+    c, v = z.shape[1], z.shape[2]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (ps_, bh, nc, c), 3)
+    oh = (codes[..., None] == iota).astype(jnp.float32)
+    ohb = jnp.transpose(oh, (2, 0, 1, 3)).reshape(nc, ps_ * bh, c)
+    sub = jax.lax.dot_general(ohb, z.astype(jnp.float32),
+                              (((2,), (1,)), ((0,), (0,))),
+                              preferred_element_type=jnp.float32)
+    rows = jnp.transpose(sub, (1, 0, 2)).reshape(ps_, bh, nc * v)
+    rows = rows * s[None, :, None]
+    return jnp.transpose(rows, (1, 0, 2))                # (bh, ps, hd)
+
+
+def _flash_kernel_kvq(phys_ref, pos_ref, win_ref, ks_ref,   # scalar prefetch
+                      q_ref, kc_ref, vc_ref, zk_ref, zv_ref,
+                      sk_ref, sv_ref,                       # inputs
+                      m_ref, l_ref, acc_ref, *, ps, sp):
+    """Quantized-pool twin of :func:`_flash_kernel`: the DMAed page block
+    is a uint8 code tile (``nc`` bytes/token/head instead of ``4*D``);
+    K/V are dequantized in VMEM right before the score / value dots."""
+    ib = pl.program_id(0)
+    is_ = pl.program_id(2)
+    ip = pl.program_id(3)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lp = is_ * sp + ip                                   # LOGICAL page id
+    kj = lp * ps + jax.lax.broadcasted_iota(jnp.int32, (1, 1, ps), 2)
+    mask = _split_masks(pos_ref[ib], win_ref[0], ks_ref[ib], kj)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bh, G, D)
+    k = _deq_tile(kc_ref[0].astype(jnp.int32), zk_ref[...],
+                  sk_ref[:, 0])                          # (bh, ps, D)
+    sc = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    sc = jnp.where(mask, sc, NEG_INF)                    # (bh, G, ps)
+    m_prev = m_ref[0, 0]                                 # (bh, G)
+    m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+    p = jnp.where(mask, jnp.exp(sc - m_new[..., None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    v = _deq_tile(vc_ref[0].astype(jnp.int32), zv_ref[...],
+                  sv_ref[:, 0])                          # (bh, ps, D)
+    pv = jax.lax.dot_general(p, v, (((2,), (1,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_ref[0, 0] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[0, 0] = acc_ref[0, 0] * alpha[..., None] + pv
+
+
+def _splits_pallas_kvq(qg, kc_pages, vc_pages, zk, zv, sk, sv,
+                       phys, pos, win, ks,
+                       split_pages: int, block_heads: int,
+                       interpret: bool = False):
+    """Phase-1 triples off a QUANTIZED pool. Same grid/page-map contract
+    as :func:`_splits_pallas`; the codebook tables and per-head scales
+    ride along as small VMEM-resident operands (zk/zv whole, sk/sv tiled
+    with the kv-head grid axis)."""
+    b, kvh, g, d = qg.shape
+    ps = kc_pages.shape[1]
+    nc, c, v = zk.shape
+    sp = split_pages
+    ns = phys.shape[1] // sp
+    bh = block_heads
+    grid = (b, kvh // bh, ns, sp)
+
+    def page_map(ib, ih, is_, ip, phys_ref, *_):
+        return (phys_ref[ib, is_ * sp + ip], 0, ih, 0)
+
+    def table_map(ib, ih, is_, ip, *_):
+        return (0, 0, 0)
+
+    def scale_map(ib, ih, is_, ip, *_):
+        return (ih, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bh, g, d),
+                         lambda ib, ih, is_, ip, *_: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, ps, bh, nc), page_map),
+            pl.BlockSpec((1, ps, bh, nc), page_map),
+            pl.BlockSpec((nc, c, v), table_map),
+            pl.BlockSpec((nc, c, v), table_map),
+            pl.BlockSpec((bh, 1), scale_map),
+            pl.BlockSpec((bh, 1), scale_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bh, g),
+                         lambda ib, ih, is_, ip, *_: (is_, ib, ih, 0)),
+            pl.BlockSpec((1, 1, bh, g),
+                         lambda ib, ih, is_, ip, *_: (is_, ib, ih, 0)),
+            pl.BlockSpec((1, 1, bh, g, d),
+                         lambda ib, ih, is_, ip, *_: (is_, ib, ih, 0, 0)),
+        ],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((ns, b, kvh, g), jnp.float32),
+        jax.ShapeDtypeStruct((ns, b, kvh, g), jnp.float32),
+        jax.ShapeDtypeStruct((ns, b, kvh, g, d), jnp.float32),
+    ]
+    kern = functools.partial(_flash_kernel_kvq, ps=ps, sp=sp)
+    return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        phys, pos, win, ks, qg, kc_pages, vc_pages,
+        zk.astype(jnp.float32), zv.astype(jnp.float32),
+        sk.reshape(kvh, 1).astype(jnp.float32),
+        sv.reshape(kvh, 1).astype(jnp.float32))
+
+
+def _flash_xla_kvq(qg, kc_pages, vc_pages, zk, zv, sk, sv,
+                   phys, pos, win, ks):
+    """XLA-native quantized-pool decode: LUT-accumulate, never dequantize.
+
+    The paper's CCM→IMM split applied to attention scores: per (kv head,
+    query head, subspace) build the tiny LUT ``q_sub · z`` — scores are
+    then a one-hot contraction of the gathered CODE pages (uint8, ``nc``
+    bytes/token/head of HBM traffic instead of ``4*D``). The value side
+    pools probability mass per (subspace, centroid) first and applies
+    each centroid vector once — fp K/V rows are never materialised, not
+    even transiently. Returns the cache triple (m, l, acc)."""
+    b, kvh, g, d = qg.shape
+    ps = kc_pages.shape[1]
+    nc, c, v = zk.shape
+    np_ = phys.shape[1]
+    t = np_ * ps
+    kc = kc_pages[phys].reshape(b, t, kvh, nc)           # uint8 gathers —
+    vc = vc_pages[phys].reshape(b, t, kvh, nc)           # 4-16x less HBM
+    # score LUT: fold the per-head K scale into the query
+    qs = (qg * sk[None, :, None, None]).reshape(b, kvh, g, nc, v)
+    lut_k = jnp.einsum("bkgsv,scv->bkgsc", qs, zk.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    oh_k = jax.nn.one_hot(kc.astype(jnp.int32), c, dtype=jnp.float32)
+    sc = jnp.einsum("btksc,bkgsc->bkgt", oh_k, lut_k,
+                    preferred_element_type=jnp.float32)  # (B, KVH, G, T)
+    kj = jnp.arange(t, dtype=jnp.int32)
+    mask = _split_masks(pos[:, None], win, ks[:, None], kj[None])  # (B, T)
+    sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1)                             # (B, KVH, G)
+    p = jnp.where(mask[:, None, None, :],
+                  jnp.exp(sc - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    # value LUT-accumulate: probability mass per (head, subspace, centroid)
+    oh_v = jax.nn.one_hot(vc.astype(jnp.int32), c, dtype=jnp.float32)
+    w = jnp.einsum("bkgt,btksc->bkgsc", p, oh_v,
+                   preferred_element_type=jnp.float32)
+    acc = jnp.einsum("bkgsc,scv->bkgsv", w, zv.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    acc = acc.reshape(b, kvh, g, d) * sv[None, :, None, None]
+    return m, l, acc
+
+
+# ---------------------------------------------------------------------------
 # XLA-native impl ("ref"): page-table decode without gathering K/V rows
 # ---------------------------------------------------------------------------
 
@@ -275,6 +443,7 @@ def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                        k_new: jax.Array, v_new: jax.Array,
                        phys: jax.Array, positions, *,
                        window=0, kv_start=0, impl: str = "ref",
+                       codebook: Optional[dict] = None,
                        split_pages: Optional[int] = None,
                        block_heads: Optional[int] = None,
                        interpret: bool = False) -> jax.Array:
@@ -283,11 +452,18 @@ def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
     q (B,1,H,D); k_pages/v_pages (P+1, page, KVH, D) — one layer's slice
     of the pool, last page = trash; k_new/v_new (B,1,KVH,D) the fresh
-    token (NOT yet in the pool — the caller scatters it afterwards).
+    token (NOT yet in the pool — the caller scatters it afterwards, and
+    its self term is always computed from the fp values, so the newest
+    token is exact even on a quantized pool).
     phys (B, NP) physical page ids, already trash-redirected.
     positions (B,) int32 per-slot lengths (-1 = inactive lane: output is
     the garbage ``v_new`` row, discarded by the caller — same contract
     as ``_sdpa_decode_combine``). window/kv_start: scalar or (B,).
+    codebook: one layer's slice of the KV codebook pytree (``{"zk":
+    (nc,c,v), "zv": ..., "sk": (KVH,), "sv": ...}``, see
+    core/kv_codebook.py) — when given, k_pages/v_pages are uint8 CODE
+    pools ``(P+1, page, KVH, nc)`` and the impl dequantizes in VMEM
+    (pallas) or LUT-accumulates (ref) without materialising fp K/V.
     impl: "pallas" | "ref". Returns (B, 1, H*D) in q.dtype.
     """
     b, s, h, d = q.shape
@@ -303,8 +479,9 @@ def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     win = jnp.asarray(window, jnp.int32).reshape(-1)[:1]   # (1,) scalar
 
     if impl == "pallas":
+        deq = 0 if codebook is None else 4
         blk = select_blocks("flash_decode", b, np_, ps, d,
-                            k_pages.dtype.itemsize)
+                            k_pages.dtype.itemsize, deq_itemsize=deq)
         sp = min(split_pages or blk.block_k, np_)
         bh = min(block_heads or blk.block_n, kvh)
         while kvh % bh:
@@ -313,11 +490,23 @@ def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         if pad:                       # trash-pad: kj >= NP*page >= pos
             phys = jnp.pad(phys, ((0, 0), (0, pad)),
                            constant_values=k_pages.shape[0] - 1)
-        m, l, acc = _splits_pallas(qg, k_pages, v_pages, phys, pos, win,
-                                   ks, sp, bh, interpret=interpret)
+        if codebook is None:
+            m, l, acc = _splits_pallas(qg, k_pages, v_pages, phys, pos,
+                                       win, ks, sp, bh, interpret=interpret)
+        else:
+            m, l, acc = _splits_pallas_kvq(
+                qg, k_pages, v_pages, codebook["zk"], codebook["zv"],
+                codebook["sk"], codebook["sv"], phys, pos, win, ks,
+                sp, bh, interpret=interpret)
         m, l, acc = reduce_splits(m, l, acc)
     elif impl == "ref":
-        m, l, acc = _flash_xla(qg, k_pages, v_pages, phys, pos, win[0], ks)
+        if codebook is None:
+            m, l, acc = _flash_xla(qg, k_pages, v_pages, phys, pos,
+                                   win[0], ks)
+        else:
+            m, l, acc = _flash_xla_kvq(
+                qg, k_pages, v_pages, codebook["zk"], codebook["zv"],
+                codebook["sk"], codebook["sv"], phys, pos, win[0], ks)
     else:
         raise ValueError(f"unknown flash impl {impl!r} (pallas | ref)")
 

@@ -128,3 +128,28 @@ def flash_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     out = jnp.einsum("bkgt,btkd->bkgd", probs, v_all,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, 1, h * d).astype(q.dtype)
+
+
+def flash_decode_kvq_ref(q: jax.Array, kc_pages: jax.Array,
+                         vc_pages: jax.Array, cb: dict,
+                         k_new: jax.Array, v_new: jax.Array,
+                         phys: jax.Array, positions, window=0,
+                         kv_start=0) -> jax.Array:
+    """Oracle for the vector-quantized pool: dequantize-then-reference.
+
+    kc_pages/vc_pages (P+1, page, KVH, nc) uint8 code pools; cb is one
+    layer's codebook slice {"zk": (nc,c,v), "zv": ..., "sk": (KVH,),
+    "sv": ...}. Decodes the whole pool with plain advanced indexing (no
+    one-hot tricks, no LUT factoring) and delegates to the dense oracle
+    — the trusted semantics both the LUT-accumulate ref impl and the
+    in-kernel-dequant pallas impl must reproduce.
+    """
+    def deq(codes, z, s):
+        nc = z.shape[0]
+        sub = z.astype(jnp.float32)[jnp.arange(nc), codes.astype(jnp.int32)]
+        rows = sub.reshape(*codes.shape[:-1], -1)
+        return rows * s.astype(jnp.float32)[:, None]
+    k_pages = deq(kc_pages, cb["zk"], cb["sk"])
+    v_pages = deq(vc_pages, cb["zv"], cb["sv"])
+    return flash_decode_ref(q, k_pages, v_pages, k_new, v_new, phys,
+                            positions, window=window, kv_start=kv_start)

@@ -83,7 +83,8 @@ def fit_vmem(block_n: int, block_k: int, c: int,
 
 def select_blocks(kind: str, m: int, nc: int, c: int,
                   n: Optional[int] = None,
-                  itemsize: int = 4) -> BlockConfig:
+                  itemsize: int = 4,
+                  deq_itemsize: int = 0) -> BlockConfig:
     """Pick (block_m, block_n, block_k) for kernel ``kind`` on this shape.
 
     kind: "assign" | "lut_gemm" | "fused" | "flash_decode".  All values
@@ -91,6 +92,12 @@ def select_blocks(kind: str, m: int, nc: int, c: int,
     non-multiples).
     itemsize: bytes per LUT entry (1 for int8 LUTs — they fit 4x bigger
     tiles in the same VMEM budget).
+    deq_itemsize: flash_decode only — a vector-quantized KV pool DMAs
+    uint8 code tiles (itemsize=1) but dequantizes them to fp INSIDE the
+    kernel, so the dequantized copies stay VMEM-resident too; this is
+    their element size (0 for fp pools). Counting the code tile at the
+    full head_dim width overstates it by ``v``x — conservative on
+    purpose.
 
     For "flash_decode" the axes are reinterpreted for the paged
     attention kernel: m = batch slots, nc = pages per slot, c = page
@@ -102,8 +109,10 @@ def select_blocks(kind: str, m: int, nc: int, c: int,
     if kind == "flash_decode":
         bh = cfg.block_n
         hd = n or 128
-        # resident per grid step: K and V page tiles (double-buffered)
-        while bh > 1 and 4 * c * bh * hd * itemsize > _VMEM_BUDGET:
+        # resident per grid step: K and V page tiles (double-buffered),
+        # plus the in-kernel dequantized fp tiles for quantized pools
+        per_elt = itemsize + deq_itemsize
+        while bh > 1 and 4 * c * bh * hd * per_elt > _VMEM_BUDGET:
             bh //= 2
         sp = min(cfg.block_k, max(nc, 1))
         return BlockConfig(cfg.block_m, bh, sp)

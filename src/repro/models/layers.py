@@ -522,6 +522,11 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
         k = rope(k.reshape(b, s, kvh, hd), positions, cfg.rope_theta)
         v = v.reshape(b, s, kvh, hd)
     if decode_slab and cache is not None and cfg.head_layout != "hd":
+        # vector-quantized pool: cache["k"/"v"] are uint8 codes and the
+        # per-layer codebook slice rides along; the fresh slab stays fp
+        # (model._encode_rows quantizes at the scatter site) and the
+        # kernel dequantizes / LUT-accumulates the pool in place.
+        cb = cache.get("codebook")
         if s == 1:
             if paged_phys is not None:
                 # paged flash decode: cache is the raw page pool slice;
@@ -529,7 +534,7 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
                 out = flash_decode_paged(
                     q, cache["k"], cache["v"], k, v, paged_phys,
                     q_offset, window=window, kv_start=kv_start,
-                    impl=flash_impl,
+                    impl=flash_impl, codebook=cb,
                     interpret=jax.default_backend() != "tpu")
             else:
                 out = _sdpa_decode_combine(
@@ -547,8 +552,11 @@ def attention(p: Params, x: jax.Array, cfg, qc: QuantConfig,
                                k.astype(x.dtype), v.astype(x.dtype),
                                q_offset, window)
         out, r4 = proj(p["wo"], out, qc)
-        slab = {"k": k.astype(cache["k"].dtype),
-                "v": v.astype(cache["v"].dtype)}
+        if cb is not None:      # quantized pool: slab must stay fp
+            slab = {"k": k, "v": v}
+        else:
+            slab = {"k": k.astype(cache["k"].dtype),
+                    "v": v.astype(cache["v"].dtype)}
         return out, r1 + r2 + r3 + r4, slab
 
     k_fresh, v_fresh = k, v

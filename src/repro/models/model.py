@@ -23,6 +23,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.kv_codebook import (CODEBOOK_KEY, kv_decode_stacked,
+                                    kv_encode_stacked)
 from repro.core.lut import DENSE, QuantConfig
 from repro.kernels.flash_decode import resolve_flash_impl
 from .config import ModelConfig
@@ -571,7 +573,7 @@ class Model:
     # paged serving (continuous batching; see src/repro/serve/)
     # ------------------------------------------------------------------
     def init_paged_cache(self, num_slots: int, max_seq: int, page_size: int,
-                         num_pages: int, dtype=None) -> Params:
+                         num_pages: int, dtype=None, codebook=None) -> Params:
         """Physical cache storage for the paged serving engine.
 
         Attention families return a page pool ``{"k": (L, num_pages+1,
@@ -580,11 +582,38 @@ class Model:
         state is O(1) per sequence, so it stays slot-indexed
         (``(L, num_slots, ...)``) and is recycled on eviction; the hybrid
         family keeps its few shared-attention invocations slot-dense.
+
+        codebook: optional :class:`repro.core.kv_codebook.KVCodebook` —
+        the pool then stores uint8 per-subspace centroid indices
+        ``(L, num_pages+1, page_size, KVH, nc)`` instead of fp rows, and
+        the codebook pytree rides the cache under ``"codebook"`` (every
+        paged entry point detects quantization by that key). Attention
+        families only.
         """
         cfg = self.cfg
         dtype = dtype or self.dtype
         l, kvh, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        if codebook is not None and cfg.family not in ATTN_FAMILIES:
+            raise NotImplementedError(
+                "KV quantization applies to paged attention pools only; "
+                f"the {cfg.family!r} family has recurrent state")
         if cfg.family in ATTN_FAMILIES:
+            if codebook is not None:
+                if (codebook.num_layers, codebook.head_dim) != (l, hd):
+                    raise ValueError(
+                        f"codebook (L={codebook.num_layers}, "
+                        f"HD={codebook.head_dim}) does not match model "
+                        f"(L={l}, HD={hd})")
+                shape = (l, num_pages + 1, page_size, kvh, codebook.nc)
+                # each cache owns PRIVATE copies of the codebook leaves:
+                # the serving jits donate the cache pytree, and donation
+                # deletes buffers — sharing one KVCodebook's arrays across
+                # caches would let one engine's step invalidate another's.
+                cb_tree = {key: jnp.array(leaf, copy=True)
+                           for key, leaf in codebook.tree().items()}
+                return {"k": jnp.zeros(shape, jnp.uint8),
+                        "v": jnp.zeros(shape, jnp.uint8),
+                        CODEBOOK_KEY: cb_tree}
             shape = (l, num_pages + 1, page_size, kvh, hd)
             return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
         conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
@@ -609,15 +638,36 @@ class Model:
     def _paged_view(self, kv: Params, phys: jax.Array):
         """Gather pages into a dense (L, B, NP*page, KVH, HD) KV view.
 
-        phys: (B, NP) physical page ids (already trash-redirected)."""
+        phys: (B, NP) physical page ids (already trash-redirected).
+        A quantized pool (``"codebook"`` in kv) is gathered as uint8
+        codes and decoded to an fp view — the returned dict is always
+        plain ``{"k", "v"}`` fp, so every gathered-view consumer
+        (prefill, verify, the legacy gather decode path) reuses the
+        dense attention math unchanged."""
         l = kv["k"].shape[0]
         ps = kv["k"].shape[2]
         b, np_ = phys.shape
-        kvh, hd = kv["k"].shape[3], kv["k"].shape[4]
+        kvh, w = kv["k"].shape[3], kv["k"].shape[4]
 
         def view(pages):
-            return pages[:, phys].reshape(l, b, np_ * ps, kvh, hd)
-        return {"k": view(kv["k"]), "v": view(kv["v"])}
+            return pages[:, phys].reshape(l, b, np_ * ps, kvh, w)
+        cb = kv.get(CODEBOOK_KEY)
+        if cb is None:
+            return {"k": view(kv["k"]), "v": view(kv["v"])}
+        dt = self.dtype
+        return {"k": kv_decode_stacked(view(kv["k"]), cb["zk"], cb["sk"], dt),
+                "v": kv_decode_stacked(view(kv["v"]), cb["zv"], cb["sv"], dt)}
+
+    def _encode_rows(self, kv: Params, key: str, rows: jax.Array):
+        """Fresh fp K/V rows -> pool representation for stream ``key``.
+
+        Identity on an fp pool; per-subspace codebook assignment (uint8
+        codes) on a quantized one. rows (L, ..., KVH, HD)."""
+        cb = kv.get(CODEBOOK_KEY)
+        if cb is None:
+            return rows
+        z, s = (cb["zk"], cb["sk"]) if key == "k" else (cb["zv"], cb["sv"])
+        return kv_encode_stacked(rows, z, s)
 
     def prefill_paged(self, params: Params, tokens: jax.Array, kv: Params,
                       page_table: jax.Array, slot, pos, valid_len,
@@ -667,10 +717,11 @@ class Model:
             page, off = tok_pos // ps, tok_pos % ps
             live = jnp.arange(c) < valid_len
             tgt = jnp.where(live, phys[page], trash)              # (C,)
-            new_kv = {}
+            new_kv = dict(kv)       # codebook (if any) passes through
             for key in ("k", "v"):
                 rows = jax.lax.dynamic_slice_in_dim(
                     new_view[key][:, 0], pos, c, axis=1)          # (L,C,..)
+                rows = self._encode_rows(kv, key, rows)
                 new_kv[key] = kv[key].at[:, tgt, off].set(rows)
         else:
             cache_view, write_back = self._slot_state_view(kv, slot, pos)
@@ -784,8 +835,10 @@ class Model:
             # non-decoding lanes MUST NOT write through their page table:
             # a mid-prefill slot's pages hold real prompt KV.
             tgt = jnp.where(live, phys[jnp.arange(b), page], trash)
-            new_kv = {key: kv[key].at[:, tgt, off].set(slabs[key][:, :, 0])
-                      for key in ("k", "v")}
+            new_kv = dict(kv)
+            for key in ("k", "v"):
+                slab = self._encode_rows(kv, key, slabs[key][:, :, 0])
+                new_kv[key] = kv[key].at[:, tgt, off].set(slab)
         elif cfg.family == "ssm":
             x, _, _, upd = self._run_blocks(
                 params, x, qc, q_offset=positions, prefix_len=0, cache=kv)
@@ -877,8 +930,10 @@ class Model:
         page, off = tok_pos // ps, tok_pos % ps
         tgt = jnp.where(live, jnp.take_along_axis(phys, page, axis=1),
                         trash)                                    # (B, T)
-        new_kv = {key: kv[key].at[:, tgt, off].set(slabs[key])
-                  for key in ("k", "v")}
+        new_kv = dict(kv)
+        for key in ("k", "v"):
+            slab = self._encode_rows(kv, key, slabs[key])
+            new_kv[key] = kv[key].at[:, tgt, off].set(slab)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._head(params, x)                            # (B, T, V)
         return logits, new_kv

@@ -202,7 +202,7 @@ def _kv_model_axes(cfg: ModelConfig, model_axis: str, msize: int):
 
 
 def paged_cache_pspecs(cfg: ModelConfig, mesh: Mesh,
-                       model_axis: str = "model"):
+                       model_axis: str = "model", quantized: bool = False):
     """PartitionSpecs for the PAGED serving cache (Model.init_paged_cache).
 
     Layout (see docs/serving.md): attention families store KV as a physical
@@ -214,12 +214,24 @@ def paged_cache_pspecs(cfg: ModelConfig, mesh: Mesh,
     SSM / hybrid slot-indexed state shards its channel / head dims over
     ``model`` (falling back to replicated on non-divisible dims). The page
     table, positions and tokens are host-managed and replicated.
+
+    ``quantized``: the pool holds uint8 codes ``(L, P+1, page, KVH, nc)``
+    plus the codebook pytree. kv heads still shard over ``model`` when
+    divisible, but the last dim is the SUBSPACE axis, not head_dim — the
+    head_dim fallback does not apply (a centroid spans ``v`` contiguous
+    fp lanes that one device must own), so it replicates instead. The
+    codebook tables are small and replicated everywhere.
     """
     m = model_axis
     msize = mesh.shape[m]
     mh, md = _kv_model_axes(cfg, m, msize)
-    kv = P(None, None, None, mh, md)        # (L, P+1, page, KVH, HD)
+    if quantized:
+        md = None                           # last dim = subspaces, whole
+    kv = P(None, None, None, mh, md)        # (L, P+1, page, KVH, HD|nc)
     if cfg.family in ("dense", "moe", "audio", "vlm"):
+        if quantized:
+            cbook = {"zk": P(), "zv": P(), "sk": P(), "sv": P()}
+            return {"k": kv, "v": kv, "codebook": cbook}
         return {"k": kv, "v": kv}
     conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
     mamba = {

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.kv_codebook import KVCodebook
 from repro.core.lut import DENSE, QuantConfig
 
 from .kv_cache import PagedKVCache, PagePoolExhausted
@@ -226,7 +227,8 @@ class Engine:
                  spec_decode: Optional[SpecConfig] = None,
                  max_queue: Optional[int] = None,
                  degradation: Optional[DegradationPolicy]
-                 = DEFAULT_DEGRADATION):
+                 = DEFAULT_DEGRADATION,
+                 kv_codebook: Optional[KVCodebook] = None):
         self.model = model
         self.params = params
         self.qc = qc
@@ -240,9 +242,29 @@ class Engine:
             raise ValueError(
                 f"prefill_chunk ({self.prefill_chunk}) must divide "
                 f"max_seq ({max_seq})")
+        # KV-cache quantization (docs/serving.md §KV-cache quantization):
+        # with qc.kv_quant == "vq" the page pool stores uint8 codebook
+        # indices; the codebook is fit here, once, from a deterministic
+        # calibration prefill (bit-identical across replicas/restarts, so
+        # prefix pages hash compatibly) unless the caller supplies one.
+        self.kv_codebook = kv_codebook
+        if qc.kv_quant == "vq":
+            from repro.models.model import ATTN_FAMILIES
+            if model.cfg.family not in ATTN_FAMILIES:
+                raise ValueError(
+                    "kv_quant='vq' quantizes paged attention KV pages; "
+                    f"the {model.cfg.family!r} family has recurrent "
+                    "state, which has no page rows to encode")
+            if self.kv_codebook is None:
+                self.kv_codebook = self._fit_kv_codebook()
+        elif kv_codebook is not None:
+            raise ValueError(
+                "kv_codebook supplied but qc.kv_quant is 'none' — set "
+                "qc = qc.replace(kv_quant='vq') to serve quantized")
         self.kv = PagedKVCache(model, self.num_slots, max_seq,
                                page_size=page_size, num_pages=num_pages,
-                               prefix_cache=prefix_cache)
+                               prefix_cache=prefix_cache,
+                               codebook=self.kv_codebook)
         self.scheduler = SlotScheduler(self.num_slots, max_queue=max_queue)
         self.step_count = 0
         # Degradation ladder state (docs/robustness.md): mode 0..3, step
@@ -321,6 +343,27 @@ class Engine:
             self.drafter = spec_decode.build_drafter()
             self.drafter.bind(self)
 
+    def _fit_kv_codebook(self) -> KVCodebook:
+        """Fit the KV codebook from a deterministic calibration prefill.
+
+        A fixed token ramp (no PRNG-dependent data) runs through the fp
+        dense-cache prefill; the per-layer K/V rows it leaves behind are
+        the k-means sample. Everything downstream of (model, params, qc)
+        is deterministic — a warm replica and a cold restart fit the same
+        codebook, so their quantized prefix pages share one salt space.
+        """
+        model, cfg = self.model, self.model.cfg
+        t = min(128, self.max_seq)
+        tokens = (jnp.arange(t, dtype=jnp.int32) * 31 + 7) % cfg.vocab_size
+        cache = model.init_cache(1, t)
+        _, cache = jax.jit(
+            lambda p, b, c: model.prefill(p, b, c, self.qc)
+        )(self.params, {"tokens": tokens[None]}, cache)
+        rows_k = cache["layers"]["k"][:, 0]            # (L, T, KVH, HD)
+        rows_v = cache["layers"]["v"][:, 0]
+        return KVCodebook.fit(rows_k, rows_v, v=self.qc.kv_v,
+                              c=self.qc.kv_c, key=jax.random.PRNGKey(0))
+
     def _init_sharded(self, mesh) -> None:
         """Place params + paged cache on ``mesh`` and compile the paged
         entry points with explicit in/out shardings (tensor parallelism
@@ -334,7 +377,10 @@ class Engine:
         pshard = logical_to_sharding(
             param_pspecs(self.params, cfg, model_axis_size=msize), mesh)
         self.params = jax.device_put(self.params, pshard)
-        cshard = logical_to_sharding(paged_cache_pspecs(cfg, mesh), mesh)
+        cshard = logical_to_sharding(
+            paged_cache_pspecs(cfg, mesh,
+                               quantized=self.kv_codebook is not None),
+            mesh)
         self.kv.data = jax.device_put(self.kv.data, cshard)
         repl = NamedSharding(mesh, P())
         self._table_sharding = repl

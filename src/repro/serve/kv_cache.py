@@ -156,7 +156,8 @@ class PageAllocator:
         self._free.append(p)
 
 
-def _chunk_keys(tokens, page_size: int) -> List[Tuple[int, tuple]]:
+def _chunk_keys(tokens, page_size: int,
+                salt: int = 0) -> List[Tuple[int, tuple]]:
     """Chained content keys of ``tokens`` at page granularity.
 
     Key ``i`` is ``(hash(key_{i-1}), chunk_i_token_tuple)`` and covers
@@ -168,9 +169,15 @@ def _chunk_keys(tokens, page_size: int) -> List[Tuple[int, tuple]]:
     a ``hash()`` collision between two *parent* chains (~2^-64 per pair —
     negligible by accident, though not cryptographically hard). Only full
     pages are keyed; the tail remainder is ignored.
+
+    ``salt`` seeds the chain. A vector-quantized pool stores codebook
+    INDICES, which are only comparable under the codebook that produced
+    them — seeding with the codebook fingerprint makes pages written
+    under different codebooks (or a quantized vs an fp pool) live in
+    disjoint key spaces, so they can never alias.
     """
     out: List[Tuple[int, tuple]] = []
-    h = 0
+    h = salt
     for i in range(len(tokens) // page_size):
         key = (h, tuple(tokens[i * page_size:(i + 1) * page_size]))
         out.append(key)
@@ -265,7 +272,7 @@ class PageTable:
 
     def __init__(self, num_slots: int, max_seq: int, page_size: int,
                  num_pages: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, content_salt: int = 0):
         if max_seq % page_size:
             raise ValueError(
                 f"max_seq ({max_seq}) must be a multiple of page_size "
@@ -281,10 +288,18 @@ class PageTable:
             PrefixCache(page_size) if prefix_cache else None)
         self.table = np.full((num_slots, self.pages_per_slot), -1, np.int32)
         self._slot_pages: List[List[int]] = [[] for _ in range(num_slots)]
+        # seed of the content-hash chain (see _chunk_keys): pages written
+        # under different pool encodings must never alias
+        self.content_salt = content_salt
+        # bytes per physical page across k+v and all layers — set by
+        # PagedKVCache from the actual device arrays; 0 = unknown (bare
+        # PageTable use in tests)
+        self.page_bytes = 0
         # per-slot registration cursor: (full pages hashed, chain hash) —
         # lets register_prefix resume mid-prompt instead of rehashing the
         # whole prefix on every prefill chunk
-        self._reg_state: List[Tuple[int, int]] = [(0, 0)] * num_slots
+        self._reg_state: List[Tuple[int, int]] = [
+            (0, content_salt)] * num_slots
         self._dev: Optional[jnp.ndarray] = None
 
     # -- capacity queries ---------------------------------------------------
@@ -311,12 +326,21 @@ class PageTable:
     def occupancy(self) -> str:
         """One-line pool accounting for capacity-error messages and
         preemption logs: live (slot-referenced), cached-parked (prefix
-        LRU, reclaimable), and free pages."""
-        return (f"pool: {self.live_pages} live, "
-                f"{self.prefix.reclaimable if self.prefix else 0} "
-                f"cached-parked, {self.allocator.available} free of "
-                f"{self.allocator.num_pages} pages "
-                f"({self.page_size} tokens each)")
+        LRU, reclaimable), and free pages — with the byte sizes behind
+        them when :attr:`page_bytes` is known (pages of a quantized pool
+        are 4-16x smaller than fp pages; page counts alone no longer
+        describe HBM use)."""
+        pages = (f"pool: {self.live_pages} live, "
+                 f"{self.prefix.reclaimable if self.prefix else 0} "
+                 f"cached-parked, {self.allocator.available} free of "
+                 f"{self.allocator.num_pages} pages "
+                 f"({self.page_size} tokens each)")
+        if not self.page_bytes:
+            return pages
+        mib = self.page_bytes / (1 << 20)
+        return (f"{pages}; {self.live_pages * mib:.2f} MiB live of "
+                f"{self.allocator.num_pages * mib:.2f} MiB "
+                f"({self.page_bytes} B/page)")
 
     def can_fit(self, n_tokens: int,
                 match: Optional[PrefixMatch] = None) -> bool:
@@ -418,7 +442,7 @@ class PageTable:
             self._slot_pages[slot] = []
             self.table[slot, :] = -1
             self._dev = None
-        self._reg_state[slot] = (0, 0)
+        self._reg_state[slot] = (0, self.content_salt)
 
     def trim(self, slot: int, n_tokens: int) -> int:
         """Shrink a slot to the pages covering ``n_tokens`` tokens
@@ -454,7 +478,7 @@ class PageTable:
         m = PrefixMatch()
         if self.prefix is None or len(tokens) <= 1:
             return m
-        for key in _chunk_keys(tokens, self.page_size):
+        for key in _chunk_keys(tokens, self.page_size, self.content_salt):
             page = self.prefix.lookup(key)
             if page is None:
                 break
@@ -556,7 +580,11 @@ class PageTable:
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _copy_page(data: Dict[str, jax.Array], src, dst) -> Dict[str, jax.Array]:
     """Copy one physical page's K/V rows (CoW fork). ``src``/``dst`` are
-    traced scalars, so every fork reuses one compiled executable."""
+    traced scalars, so every fork reuses one compiled executable.
+
+    Callers must pass ONLY the page-pool leaves (``{"k", "v"}``) — the
+    axis-1 copy is meaningless for anything else (a quantized cache's
+    codebook tables, say), and would silently corrupt it."""
     return jax.tree_util.tree_map(
         lambda t: t.at[:, dst].set(t[:, src]), data)
 
@@ -581,23 +609,65 @@ class PagedKVCache:
 
     def __init__(self, model, num_slots: int, max_seq: int,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 dtype=None, prefix_cache: bool = True):
+                 dtype=None, prefix_cache: bool = True, codebook=None):
         from repro.models.model import ATTN_FAMILIES
         self.cfg = model.cfg
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.page_size = page_size
         self.paged = model.cfg.family in ATTN_FAMILIES
+        self.codebook = codebook
         # Prefix reuse needs *paged* state: Mamba2 / hybrid recurrent
         # state is a single evolving tensor per slot — there is no
         # page-granular unit of it to share, so those families always
         # report a zero reusable prefix (match_prefix below).
+        # A quantized pool salts the content-hash chain with the codebook
+        # fingerprint: its pages hold codes, not rows, and codes from
+        # different codebooks must never satisfy each other's lookups.
+        salt = codebook.fingerprint() if codebook is not None else 0
         self.table = PageTable(num_slots, max_seq, page_size, num_pages,
-                               prefix_cache=prefix_cache and self.paged)
+                               prefix_cache=prefix_cache and self.paged,
+                               content_salt=salt)
         self.data: Dict[str, Any] = model.init_paged_cache(
             num_slots, max_seq, page_size,
-            num_pages=self.table.allocator.num_pages, dtype=dtype)
+            num_pages=self.table.allocator.num_pages, dtype=dtype,
+            codebook=codebook)
         self.cow_forks = 0
+        if self.paged:
+            self.table.page_bytes = self.page_bytes
+
+    # -- byte accounting ----------------------------------------------------
+    @property
+    def bytes_per_token(self) -> int:
+        """HBM bytes ONE cached token occupies across k+v and all layers
+        — computed from the actual pool arrays, so it reflects the pool
+        encoding (fp rows vs uint8 codes) and dtype automatically."""
+        if not self.paged:
+            return 0
+        total = 0
+        for key in ("k", "v"):
+            t = self.data[key]          # (L, P+1, page, KVH, W)
+            l, _, _, kvh, w = t.shape
+            total += l * kvh * w * t.dtype.itemsize
+        return total
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes one physical page pins across k+v and all layers."""
+        return self.bytes_per_token * self.page_size
+
+    @property
+    def pool_bytes(self) -> int:
+        """Total allocatable pool capacity in bytes (trash page
+        excluded — it is never handed out)."""
+        return self.page_bytes * self.table.allocator.num_pages \
+            if self.paged else 0
+
+    @property
+    def live_bytes(self) -> int:
+        """Bytes pinned by slot-referenced pages right now."""
+        return self.page_bytes * self.table.live_pages \
+            if self.paged else 0
 
     # Paging only applies to the attention families; ssm/hybrid slots hold
     # constant-size state, so capacity checks are trivially true there.
@@ -657,8 +727,11 @@ class PagedKVCache:
         pair = self.table.adopt_prefix(slot, match)
         if pair is not None:
             src, dst = pair
-            self.data = _copy_page(self.data, jnp.int32(src),
-                                   jnp.int32(dst))
+            # page leaves only: a quantized cache also carries the
+            # codebook pytree, which has no page axis to copy along
+            pages = {key: self.data[key] for key in ("k", "v")}
+            copied = _copy_page(pages, jnp.int32(src), jnp.int32(dst))
+            self.data = {**self.data, **copied}
             self.cow_forks += 1
         return match.tokens
 
