@@ -1,41 +1,44 @@
-"""Shared benchmark utilities: timing, CSV row emission, JSON snapshots."""
+"""Shared benchmark utilities: timing, row emission, JSON snapshots.
+
+Snapshot writing lives in :mod:`repro.obs.snapshot` (one schema for the
+perf gate to trust); this module keeps the tiny ``emit``/``ROWS``
+surface the benchmark scripts share and forwards the on-disk format.
+"""
 from __future__ import annotations
 
-import json
 import time
 from typing import Callable, List
 
 import jax
 
-ROWS: List[str] = []
+from repro.obs.snapshot import make_row, write_snapshot
+
+ROWS: List[dict] = []
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    row = f"{name},{us_per_call:.3f},{derived}"
+def emit(name: str, value: float, derived: str = "", unit: str = "us",
+         direction: str = "down", tol: float = None) -> None:
+    """Record one benchmark row (schema: repro.obs.snapshot.make_row).
+
+    Defaults describe the common case — a CPU timer in microseconds
+    where smaller is better. Ratio/accuracy rows should pass an explicit
+    ``unit``/``direction`` (and optionally ``tol``) so the perf gate
+    applies the right comparison.
+    """
+    row = make_row(name, value, derived=derived, unit=unit,
+                   direction=direction, tol=tol)
     ROWS.append(row)
-    print(row)
+    print(f"{name},{value:.3f},{derived}")
 
 
 def snapshot(path: str, **meta) -> dict:
     """Write every row emitted so far (plus ``meta``) as a JSON snapshot.
 
     The snapshot is the on-disk perf trajectory (ROADMAP item 5): commit
-    one per meaningful change and diff them to see regressions. Rows keep
-    the ``emit`` schema — name, metric value, free-form derived stats.
+    one per meaningful change; ``scripts/perf_gate.py`` diffs fresh runs
+    against the committed copy and fails CI on regressions.
     """
-    rows = []
-    for row in ROWS:
-        name, val, derived = row.split(",", 2)
-        rows.append({"name": name, "value": float(val), "derived": derived})
-    doc = {"date": time.strftime("%Y-%m-%d"),
-           "backend": jax.default_backend(),
-           "device_count": jax.device_count(),
-           **meta, "rows": rows}
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"[snapshot] {len(rows)} row(s) -> {path}")
-    return doc
+    return write_snapshot(path, ROWS, **meta)
 
 
 def time_jax(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -36,9 +36,7 @@ second on-disk history.
 from __future__ import annotations
 
 import argparse
-import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +48,7 @@ from repro.core.lut import DENSE
 from repro.data import SyntheticDataset
 from repro.models.model import Model
 from repro.serve import Engine, Request
+from repro.obs.snapshot import merge_snapshot
 from repro.train import TrainConfig, Trainer
 
 try:                                   # `python -m benchmarks.kv_accuracy`
@@ -127,11 +126,14 @@ def teacher_forced_bench(model, params, smoke: bool):
     ppl_fp, ppl_q = ppl(lf), ppl(lq)
     delta = abs(ppl_q - ppl_fp)
     emit("kvacc.logit_mse", mse,
-         f"teacher-forced over {lf.shape[0]} steps, v={cb.v} c={cb.c}")
+         f"teacher-forced over {lf.shape[0]} steps, v={cb.v} c={cb.c}",
+         unit="", direction="down", tol=1.0)
     emit("kvacc.ppl_delta", delta,
-         f"fp ppl {ppl_fp:.4f} -> vq ppl {ppl_q:.4f}")
+         f"fp ppl {ppl_fp:.4f} -> vq ppl {ppl_q:.4f}",
+         unit="", direction="down", tol=1.0)
     emit("kvacc.greedy_agreement", agree * 100.0,
-         f"{agree * 100:.1f}% of greedy choices identical to fp")
+         f"{agree * 100:.1f}% of greedy choices identical to fp",
+         unit="%", direction="up", tol=0.05)
     print(f"teacher-forced: logit MSE {mse:.3e}, ppl {ppl_fp:.4f} -> "
           f"{ppl_q:.4f} (delta {delta:.4f}), greedy agreement "
           f"{agree * 100:.1f}%")
@@ -198,33 +200,15 @@ def exact_cover_bench(model, params) -> None:
         f"encode/decode is not lossless on its own centroid set")
     emit("kvacc.exact_cover_identity", 1.0,
          f"{n_new} greedy tokens bit-identical through the quantized "
-         f"engine under a from_rows codebook")
+         f"engine under a from_rows codebook",
+         unit="", direction="up")
     print(f"exact-cover: quantized engine reproduced {fp_out} exactly")
 
 
 def _merge_snapshot(path: str) -> None:
     """Fold this run's ``kvacc.*`` rows into an existing serve snapshot
     (or start one), replacing stale kvacc rows and nothing else."""
-    fresh = []
-    for row in ROWS:
-        name, val, derived = row.split(",", 2)
-        fresh.append({"name": name, "value": float(val), "derived": derived})
-    doc = {}
-    if os.path.exists(path):
-        with open(path) as f:
-            doc = json.load(f)
-    kept = [r for r in doc.get("rows", [])
-            if not r["name"].startswith("kvacc.")]
-    doc.setdefault("date", time.strftime("%Y-%m-%d"))
-    doc.setdefault("backend", jax.default_backend())
-    doc.setdefault("device_count", jax.device_count())
-    doc["kv_accuracy"] = True
-    doc["rows"] = kept + fresh
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"[snapshot] merged {len(fresh)} kvacc row(s) -> {path} "
-          f"({len(doc['rows'])} total)")
+    merge_snapshot(path, ROWS, prefix="kvacc.", kv_accuracy=True)
 
 
 def main():

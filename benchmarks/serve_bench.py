@@ -66,9 +66,24 @@ the quantized capacity is demonstrated by decoding that many requests
 concurrently to completion (``--smoke`` asserts >= 4x bytes/token and
 >= 2x resident sequences; typical at v=4/c=16 on the fp32 pool is 16x).
 
+``--obs`` adds the observability-overhead A/B (docs/observability.md):
+the mixed workload through a fully instrumented engine (phase timers on,
+tracer recording) and through ``Obs.disabled()``, interleaved best-of-3;
+``--smoke`` asserts the instrumented engine keeps >= 95% of the bare
+tokens/s (the < 5% overhead ceiling), and a micro-row prices one step's
+worth of recording in microseconds.
+
+``--trace PATH`` (requires ``--chaos``) attaches one shared
+:class:`~repro.obs.Tracer` to both chaos replicas and exports the
+faulted run as Chrome/Perfetto ``trace_event`` JSON — request lifecycle
+spans, per-replica step-phase spans, and fault/degradation/preemption
+annotations — validated structurally before the bench exits (load it at
+``ui.perfetto.dev``).
+
 ``--snapshot PATH`` (or ``auto``) writes every emitted row plus run
 metadata to a ``BENCH_serve.json`` perf snapshot — the on-disk trajectory
-for ROADMAP item 5.
+for ROADMAP item 5 — which ``scripts/perf_gate.py`` diffs against the
+committed copy in CI.
 """
 from __future__ import annotations
 
@@ -83,6 +98,7 @@ import jax.numpy as jnp
 from repro.configs import get_smoke_config
 from repro.core.lut import DENSE
 from repro.models.model import Model
+from repro.obs import Obs, Tracer, validate_trace
 from repro.serve import (BatchToCompletionEngine, Engine, FaultInjector,
                          FaultSchedule, FinishReason, ReplicaHealth,
                          ReplicaRouter, Request, SpecConfig)
@@ -155,7 +171,7 @@ def prefix_bench(mk_engine, n_requests: int, smoke: bool) -> float:
     emit("serve.prefix_reuse.prefill_reduction", reduction * 100.0,
          f"prefilled {warm.prefilled_tokens}/{warm.prompt_tokens} prompt "
          f"tokens, hit_rate={warm.prefix_hit_rate:.2f}, "
-         f"cow_forks={warm.kv.cow_forks}")
+         f"cow_forks={warm.kv.cow_forks}", unit="%", direction="up")
     print(f"prefix reuse: tokens identical to cold path; prefill tokens "
           f"reduced {reduction * 100:.0f}% "
           f"({engines['cold'].prefilled_tokens} -> {warm.prefilled_tokens})")
@@ -239,7 +255,7 @@ def spec_bench(slots: int, n_requests: int, smoke: bool) -> float:
 
 
 def chaos_bench(slots: int, n_requests: int, max_seq: int,
-                smoke: bool) -> float:
+                smoke: bool, trace_path: str = "") -> float:
     """Fault-tolerant serving under the canned chaos schedule.
 
     A 2-replica router replays the mixed workload while
@@ -256,10 +272,15 @@ def chaos_bench(slots: int, n_requests: int, max_seq: int,
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0), DENSE)
 
-    def mk_router():
+    def mk_router(tracer=None):
+        # one SHARED tracer across both replicas -> one merged timeline;
+        # the router stamps each engine's pid with its replica index
         return ReplicaRouter([Engine(model, params, DENSE, batch_size=slots,
                                      max_seq=max_seq, page_size=16,
-                                     prefill_chunk=8) for _ in range(2)])
+                                     prefill_chunk=8,
+                                     obs=Obs(tracer=tracer)
+                                     if tracer is not None else None)
+                              for _ in range(2)])
 
     def workload():
         # longs first: least-loaded dispatch then spreads them across both
@@ -273,8 +294,11 @@ def chaos_bench(slots: int, n_requests: int, max_seq: int,
     ref_reqs = workload()
     mk_router().run(ref_reqs)               # fault-free reference output
 
-    router = mk_router()
+    tracer = Tracer(enabled=True) if trace_path else None
+    router = mk_router(tracer)
     router.run(mixed_workload(2 * slots, slots, long_new=3, short_new=2))
+    if tracer is not None:
+        tracer.clear()                  # drop warmup; trace the chaos run
     FaultInjector(FaultSchedule.canned(replicas=2)).attach(router)
     reqs = workload()
     t0 = time.perf_counter()
@@ -297,7 +321,8 @@ def chaos_bench(slots: int, n_requests: int, max_seq: int,
     emit("serve.chaos.goodput_pct", goodput * 100.0,
          f"completed={len(completed)}/{len(reqs)} "
          f"retried={router.retried_requests} "
-         f"shed={sum(r.shed for r in reqs)} dead_replicas={dead}")
+         f"shed={sum(r.shed for r in reqs)} dead_replicas={dead}",
+         unit="%", direction="up")
     emit("serve.chaos.us_per_tok", dt / max(toks, 1) * 1e6,
          f"tok/s={toks / dt:.1f} under faults")
     print(f"chaos: {goodput * 100:.0f}% goodput, zero lost, completed "
@@ -309,6 +334,20 @@ def chaos_bench(slots: int, n_requests: int, max_seq: int,
             f"chaos goodput must stay >= 90% under the canned fault "
             f"schedule, got {goodput * 100:.0f}%")
         print("chaos smoke check OK (>= 90% goodput, zero lost)")
+    if tracer is not None:
+        doc = tracer.export(trace_path)
+        problems = validate_trace(doc)
+        assert not problems, f"chaos trace invalid: {problems[:5]}"
+        n_req_spans = sum(1 for e in doc["traceEvents"]
+                          if e.get("ph") == "b")
+        n_annot = sum(1 for e in doc["traceEvents"]
+                      if e.get("ph") == "i" and e.get("cat") == "annot")
+        assert n_req_spans and n_annot, (
+            "chaos trace exported but carries no request spans or no "
+            "fault/degradation annotations")
+        print(f"chaos trace: {len(doc['traceEvents'])} events "
+              f"({n_req_spans} request spans, {n_annot} annotations) -> "
+              f"{trace_path} (valid; open at ui.perfetto.dev)")
     return goodput
 
 
@@ -463,10 +502,12 @@ def kvq_bench(slots: int, smoke: bool) -> float:
     cb = kvq.kv_codebook
     emit("serve.kvq.bytes_per_tok", bpt_q,
          f"fp {bpt_fp}B -> vq {bpt_q}B ({bytes_ratio:.1f}x smaller; "
-         f"v={cb.v} c={cb.c}, {cb.equivalent_bits:.1f} eq-bits)")
+         f"v={cb.v} c={cb.c}, {cb.equivalent_bits:.1f} eq-bits)",
+         unit="B", direction="down")
     emit("serve.kvq.resident_seqs_per_pool", cap_q,
          f"{cap_q} vs fp {cap_fp} full {need}-token seqs in the same "
-         f"{budget}B pool ({cap_ratio:.1f}x); {peak} demonstrated live")
+         f"{budget}B pool ({cap_ratio:.1f}x); {peak} demonstrated live",
+         unit="seqs", direction="up")
     emit("serve.kvq.us_per_tok", dt / max(toks, 1) * 1e6,
          f"tok/s={toks / dt:.1f} at {peak} concurrent quantized slots")
     print(f"kvq: {bpt_fp}B -> {bpt_q}B per cached token "
@@ -484,9 +525,69 @@ def kvq_bench(slots: int, smoke: bool) -> float:
     return cap_ratio
 
 
+def obs_bench(model, params, slots: int, n_requests: int, max_seq: int,
+              smoke: bool) -> float:
+    """Observability-overhead A/B: fully instrumented vs ``Obs.disabled()``.
+
+    Same mixed workload, two engines differing only in the obs bundle —
+    phase timers + an enabled tracer vs the disabled no-op path
+    (counters stay live in both; they are engine state). Interleaved
+    best-of-3 tokens/s absorbs host scheduler noise the same way
+    ``time_jax_pair`` does. Returns the relative overhead in [0, 1);
+    ``--smoke`` asserts < 5% (the ISSUE ceiling). A micro-row prices the
+    raw recording primitive so the per-step cost is visible even when
+    the end-to-end delta drowns in noise.
+    """
+    def mk(obs):
+        return Engine(model, params, DENSE, batch_size=slots,
+                      max_seq=max_seq, page_size=16, prefill_chunk=8,
+                      prefix_cache=False, obs=obs)
+
+    eng_off = mk(Obs.disabled())
+    eng_on = mk(Obs(tracer=Tracer(enabled=True)))
+    for e in (eng_off, eng_on):       # per-instance jit warmup
+        e.run(mixed_workload(slots, slots, long_new=3, short_new=2))
+    best = {"off": 0.0, "on": 0.0}
+    for _ in range(3):
+        for tag, e in (("off", eng_off), ("on", eng_on)):
+            toks, dt = _run_timed(e, mixed_workload(n_requests, slots))
+            best[tag] = max(best[tag], toks / dt)
+    overhead = 1.0 - best["on"] / best["off"]
+
+    # micro: one phase record (timer observe + trace event append), x7
+    # for a step's worth of phases (admit, prefill, decode, sample,
+    # draft, verify, device_read)
+    obs = eng_on.obs
+    n_iter = 20000
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        with obs.phase("decode"):
+            pass
+    per_phase_us = (time.perf_counter() - t0) / n_iter * 1e6
+    # floor at 1.0: the perf-gate tolerance is *relative* to the
+    # baseline, so committing a 0.0 row (obs measured faster than bare,
+    # i.e. pure noise) would gate every future positive reading
+    emit("serve.obs.overhead_pct", max(overhead * 100.0, 1.0),
+         f"obs-on {best['on']:.1f} vs obs-off {best['off']:.1f} tok/s, "
+         f"best-of-3 interleaved", unit="%", direction="down", tol=4.0)
+    emit("serve.obs.record_us_per_step", per_phase_us * 7,
+         f"{per_phase_us:.3f}us per phase record (hist observe + trace "
+         f"append) x 7 phases/step", tol=1.0)
+    print(f"obs overhead: {overhead * 100:+.1f}% tokens/s "
+          f"({best['on']:.1f} instrumented vs {best['off']:.1f} bare), "
+          f"{per_phase_us:.3f}us per phase record")
+    if smoke:
+        assert overhead < 0.05, (
+            f"instrumented engine lost {overhead * 100:.1f}% tokens/s — "
+            f"the < 5% observability-overhead ceiling is blown")
+        print("obs smoke check OK (< 5% overhead, obs fully on)")
+    return overhead
+
+
 def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
           sharded: bool = False, devices: int = 0, spec: bool = False,
-          chaos: bool = False, longctx: bool = False, kvq: bool = False):
+          chaos: bool = False, longctx: bool = False, kvq: bool = False,
+          obs: bool = False, trace: str = ""):
     cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0), DENSE)
@@ -558,13 +659,16 @@ def bench(slots: int, n_requests: int, max_seq: int, smoke: bool,
         spec_bench(slots, n_requests, smoke)
     # fault-injected rows (2-replica router under the canned schedule)
     if chaos:
-        chaos_bench(slots, n_requests, max_seq, smoke)
+        chaos_bench(slots, n_requests, max_seq, smoke, trace_path=trace)
     # 8k-context decode A/B (flash page-table decode vs gather)
     if longctx:
         longctx_bench(smoke)
     # vector-quantized KV pages: bytes/token + fixed-pool capacity rows
     if kvq:
         kvq_bench(slots, smoke)
+    # observability overhead A/B (< 5% ceiling under --smoke)
+    if obs:
+        obs_bench(model, params, slots, n_requests, max_seq, smoke)
     return ratio
 
 
@@ -595,6 +699,14 @@ def main():
                          "bytes/token and resident-sequence capacity at a "
                          "fixed pool byte budget (with --smoke, asserts "
                          ">= 4x bytes/token and >= 2x capacity)")
+    ap.add_argument("--obs", action="store_true",
+                    help="add the observability-overhead A/B row (with "
+                         "--smoke, asserts < 5%% tokens/s overhead with "
+                         "phase timers and the tracer fully on)")
+    ap.add_argument("--trace", default="",
+                    help="with --chaos: export the faulted run as "
+                         "Chrome/Perfetto trace_event JSON to this path "
+                         "(validated; open at ui.perfetto.dev)")
     ap.add_argument("--snapshot", default="",
                     help="write a BENCH_serve.json perf snapshot to this "
                          "path ('auto' = repo root)")
@@ -602,6 +714,8 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=64)
     args = ap.parse_args()
+    if args.trace and not args.chaos:
+        ap.error("--trace requires --chaos (it exports the faulted run)")
     if args.devices and jax.device_count() < args.devices:
         # one-shot sentinel: the host-platform override only adds devices on
         # the CPU backend, so on a GPU/TPU host the re-exec'd process would
@@ -618,7 +732,8 @@ def main():
                             f"{args.devices}").strip()
         os.execve(sys.executable, [sys.executable] + sys.argv, env)
     bench(args.slots, args.requests, args.max_seq, args.smoke, args.sharded,
-          args.devices, args.spec, args.chaos, args.longctx, args.kvq)
+          args.devices, args.spec, args.chaos, args.longctx, args.kvq,
+          args.obs, args.trace)
     if args.snapshot:
         path = args.snapshot
         if path == "auto":
@@ -629,7 +744,7 @@ def main():
                  requests=args.requests, max_seq=args.max_seq,
                  sharded=bool(args.sharded), spec=bool(args.spec),
                  chaos=bool(args.chaos), longctx=bool(args.longctx),
-                 kvq=bool(args.kvq))
+                 kvq=bool(args.kvq), obs=bool(args.obs))
 
 
 if __name__ == "__main__":

@@ -23,7 +23,21 @@ the other replica mid-decode (docs/robustness.md). The report shows what
 production cares about under faults: completed / retried / shed counts,
 the deadline-miss rate, and per-replica health.
 
+Latency reporting comes straight off the engine's metrics registry
+(``repro.obs``): TTFT and completion latency in BOTH clocks — engine
+steps (the scheduler's arrival/finish stamps) and wall seconds (the
+``perf_counter`` stamps the engine records at the same points) — plus
+per-decoded-token TPOT. The demo used to keep its own step arithmetic,
+which silently drifted from what the engine measured; now there is one
+accounting (docs/observability.md).
+
+``--trace out.json`` records every pass into one shared tracer and
+exports a Chrome/Perfetto ``trace_event`` timeline — request lifecycle
+spans, step-phase spans, and (with ``--chaos``) fault/degradation/
+preemption annotations. Open it at ``ui.perfetto.dev``.
+
 Run: PYTHONPATH=src python examples/serve_demo.py [--chaos]
+     [--trace out.json]
 """
 import argparse
 
@@ -36,6 +50,7 @@ from repro.core import precompute_model
 from repro.core.lut import DENSE, QuantConfig
 from repro.data import SyntheticDataset
 from repro.models.model import Model
+from repro.obs import Obs, Tracer, validate_trace
 from repro.serve import (Engine, FaultInjector, FaultSchedule, FinishReason,
                          ReplicaRouter, Request, SpecConfig)
 from repro.train import TrainConfig, Trainer
@@ -78,18 +93,38 @@ def serve_trace(engine: Engine, trace):
     return reqs, peak_pages
 
 
-def report(tag: str, reqs):
-    toks = sum(len(r.out_tokens) for r in reqs)
+def report(tag: str, reqs, eng: Engine):
+    """Throughput + latency report straight off the engine registry.
+
+    One accounting: the step-clock and wall-clock families both come
+    from the histograms ``repro.serve.engine._observe_request`` fills at
+    finish time — the demo no longer re-derives latency from request
+    fields (its old arithmetic drifted from the engine's)."""
+    met = eng.obs.metrics
+    toks = met.counters().get("engine.emitted_tokens", 0)
     makespan = max(r.finish_step for r in reqs) - min(r.arrival for r in reqs)
-    ttft = [r.first_token_step - r.arrival for r in reqs]
-    lat = [r.finish_step - r.arrival for r in reqs]
     print(f"[{tag}] {len(reqs)} requests, {toks} tokens, "
           f"makespan {makespan} steps "
           f"({toks / max(makespan, 1):.2f} tok/step)")
-    print(f"  time-to-first-token: mean {np.mean(ttft):.1f} "
-          f"p95 {np.percentile(ttft, 95):.1f} steps")
-    print(f"  completion latency:  mean {np.mean(lat):.1f} "
-          f"p95 {np.percentile(lat, 95):.1f} steps")
+
+    def fam(label, steps_name, wall_name):
+        hs = met.get_histogram(steps_name)
+        hw = met.get_histogram(wall_name)
+        line = f"  {label}:"
+        if hs is not None and hs.count:
+            line += (f" mean {hs.mean:.1f} p95 "
+                     f"{hs.percentile(0.95):.1f} steps")
+        if hw is not None and hw.count:
+            line += (f" | mean {hw.mean * 1e3:.1f} p95 "
+                     f"{hw.percentile(0.95) * 1e3:.1f} ms wall")
+        print(line)
+
+    fam("time-to-first-token", "req.ttft_steps", "req.ttft_s")
+    fam("completion latency ", "req.latency_steps", "req.latency_s")
+    tpot = met.get_histogram("req.tpot_s")
+    if tpot is not None and tpot.count:
+        print(f"  per-token (TPOT):    mean {tpot.mean * 1e3:.1f} p95 "
+              f"{tpot.percentile(0.95) * 1e3:.1f} ms/token")
     for r in reqs[:4]:
         print(f"  t={r.arrival:>3} prompt={r.tokens} -> {r.out_tokens}")
 
@@ -108,12 +143,13 @@ def chaos_trace(rng: np.random.Generator, n_requests: int = 16):
     return trace
 
 
-def chaos_demo(model, params) -> None:
+def chaos_demo(model, params, tracer=None) -> None:
     """Serve the bursty trace through 2 replicas under the canned faults."""
     print("\n=== chaos: canned fault schedule over a 2-replica router ===")
     router = ReplicaRouter(
         [Engine(model, params, DENSE, batch_size=SLOTS, max_seq=96,
-                page_size=16, prefill_chunk=16, max_queue=4)
+                page_size=16, prefill_chunk=16, max_queue=4,
+                obs=Obs(tracer=tracer) if tracer is not None else None)
          for _ in range(2)])
     inj = FaultInjector(FaultSchedule.canned(replicas=2)).attach(router)
     pending = chaos_trace(np.random.default_rng(1))
@@ -156,7 +192,11 @@ def main() -> None:
                     help="serve a bursty SLO'd trace through 2 replicas "
                          "under the canned fault schedule and report "
                          "completed/retried/shed counts + deadline misses")
+    ap.add_argument("--trace", default="",
+                    help="export the run as Chrome/Perfetto trace_event "
+                         "JSON to this path (open at ui.perfetto.dev)")
     args = ap.parse_args()
+    tracer = Tracer(enabled=True) if args.trace else None
 
     cfg = get_smoke_config("qwen1.5-4b").replace(attn_impl="naive")
     model = Model(cfg)
@@ -166,7 +206,9 @@ def main() -> None:
     params, _, _ = Trainer(model, ds, DENSE, tc).run(params)
 
     if args.chaos:
-        chaos_demo(model, params)
+        chaos_demo(model, params, tracer)
+        if tracer is not None:
+            _export_trace(tracer, args.trace)
         return
 
     qi = QuantConfig(mode="lut_infer", v=4, c=16, lut_dtype="int8",
@@ -190,9 +232,10 @@ def main() -> None:
             ("dense+lut-draft", lut_params, DENSE,
              SpecConfig(k=4, draft_qc=qi))]:
         eng = Engine(model, ps, qc, batch_size=SLOTS, max_seq=96,
-                     page_size=16, prefill_chunk=16, spec_decode=spec)
+                     page_size=16, prefill_chunk=16, spec_decode=spec,
+                     obs=Obs(tracer=tracer) if tracer is not None else None)
         reqs, peak = serve_trace(eng, trace)
-        report(tag, reqs)
+        report(tag, reqs, eng)
         streams[tag] = [r.out_tokens for r in reqs]
         print(f"  peak pages in use: {peak} "
               f"(pool {eng.kv.table.allocator.num_pages}, dense cache "
@@ -210,6 +253,16 @@ def main() -> None:
     assert streams["dense+lut-draft"] == [r.out_tokens for r in ref_reqs], \
         "speculative pass diverged from plain greedy decoding"
     print("speculative pass is token-identical to plain greedy decoding")
+    if tracer is not None:
+        _export_trace(tracer, args.trace)
+
+
+def _export_trace(tracer, path: str) -> None:
+    doc = tracer.export(path)
+    problems = validate_trace(doc)
+    assert not problems, f"exported trace invalid: {problems[:5]}"
+    print(f"trace: {len(doc['traceEvents'])} events -> {path} "
+          f"(valid; open at ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Perf-regression gate over the committed BENCH_*.json snapshots.
+
+Default mode (what the slow CI job runs *after* refreshing the
+workspace snapshots): compare each workspace ``BENCH_*.json`` against
+the copy committed at a git rev (``HEAD`` by default, read via
+``git show`` so the freshly-rewritten workspace file never gates
+itself), and exit 1 if any gated row regressed beyond its tolerance
+(see ``repro.obs.perfgate`` for the direction/tolerance rules — ±25%
+on same-host CPU timers, exact on ratio/accuracy rows, per-row ``tol``
+overrides honoured).
+
+Pair mode compares two explicit files — used by ``tests/test_obs.py``
+to prove the gate actually exits non-zero on a seeded regression:
+
+    python scripts/perf_gate.py --baseline old.json --fresh new.json
+
+Timer rows measured on a different host than the baseline are reported
+but not gated under ``--gate-timers auto`` (the default); ``always`` /
+``never`` force it either way.
+
+Run:  PYTHONPATH=src python scripts/perf_gate.py [--rev HEAD]
+          [--snapshots BENCH_serve.json BENCH_kernels.json]
+          [--gate-timers auto|always|never]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.obs.perfgate import gate                      # noqa: E402
+from repro.obs.snapshot import load_snapshot, loads_snapshot  # noqa: E402
+
+DEFAULT_SNAPSHOTS = ("BENCH_serve.json", "BENCH_kernels.json")
+
+
+def _committed(rev: str, relpath: str) -> dict | None:
+    """The snapshot as committed at ``rev``, or None if absent there."""
+    proc = subprocess.run(
+        ["git", "show", f"{rev}:{relpath}"], cwd=REPO,
+        capture_output=True, text=True)
+    if proc.returncode != 0:
+        return None
+    return loads_snapshot(json.loads(proc.stdout))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rev", default="HEAD",
+                    help="git rev holding the baseline snapshots "
+                         "(default HEAD; ignored in pair mode)")
+    ap.add_argument("--snapshots", nargs="+", default=list(DEFAULT_SNAPSHOTS),
+                    help="repo-relative snapshot files to gate")
+    ap.add_argument("--baseline", default="",
+                    help="pair mode: explicit baseline snapshot file")
+    ap.add_argument("--fresh", default="",
+                    help="pair mode: explicit fresh snapshot file")
+    ap.add_argument("--gate-timers", default="auto",
+                    choices=("auto", "always", "never"),
+                    help="gate us-unit rows: auto = only when host "
+                         "fingerprints match (default)")
+    args = ap.parse_args()
+    if bool(args.baseline) != bool(args.fresh):
+        ap.error("--baseline and --fresh must be given together")
+
+    pairs = []
+    if args.baseline:
+        pairs.append((load_snapshot(args.baseline),
+                      load_snapshot(args.fresh),
+                      f"{args.baseline} -> {args.fresh}"))
+    else:
+        for rel in args.snapshots:
+            workspace = os.path.join(REPO, rel)
+            if not os.path.exists(workspace):
+                print(f"{rel}: no fresh workspace snapshot — skipped "
+                      f"(run the benchmarks with --snapshot auto first)")
+                continue
+            base = _committed(args.rev, rel)
+            if base is None:
+                print(f"{rel}: not committed at {args.rev} — skipped "
+                      f"(first snapshot, nothing to gate against)")
+                continue
+            pairs.append((base, load_snapshot(workspace),
+                          f"{rel} ({args.rev} -> workspace)"))
+
+    if not pairs:
+        print("perf gate: nothing to compare")
+        return 0
+    code, lines = gate(pairs, gate_timers=args.gate_timers)
+    print("\n".join(lines))
+    return code
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -91,6 +91,17 @@ _COMBINATORS = {
 _SYNC_READ_KINDS = ("item", "tolist", "np.asarray", "device_get",
                     "block_until_ready")
 
+#: Repo-relative path prefixes whose functions are *declared* sync-free:
+#: instrumentation that records host scalars (``repro.obs`` — counters,
+#: perf_counter timestamps, trace tuples) and by construction never
+#: touches a device value. Step-loop reachability still applies to the
+#: code that CALLS them; this knob only stops the observability layer's
+#: own helpers from tripping the step-sync rule when they are inlined
+#: into the hot path (e.g. ``np.asarray`` on an already-host buffer in a
+#: snapshot writer). Keep the list short — every entry is an audited
+#: claim, not an escape hatch.
+SYNC_FREE_PATHS = ("src/repro/obs",)
+
 
 @dataclasses.dataclass
 class FunctionInfo:
@@ -506,7 +517,8 @@ def _function_findings(graph: PackageGraph) -> List[Finding]:
                     sugg = ("keep device values on device inside traced "
                             "code; move host reads outside the jit "
                             "boundary")
-                elif in_step and kind in _SYNC_READ_KINDS:
+                elif (in_step and kind in _SYNC_READ_KINDS
+                        and not fn.path.startswith(SYNC_FREE_PATHS)):
                     rule, sev = "step-sync", "warn"
                     msg = (f"{kind} in engine step loop ({symbol}) — "
                            f"scattered per-step device read")

@@ -1,0 +1,145 @@
+"""Perf-regression gate over committed ``BENCH_*.json`` snapshots.
+
+PRs 1–9 each landed an asserted win (fused AMM, 2.2x continuous
+batching, ~54% prefix reuse, 16x KV bytes/token...) and PR 6+ started
+*recording* them — but nothing *compared* runs, so a regression would
+sit in the JSON until a human diffed it. :func:`compare` makes the
+trajectory a gate:
+
+* rows are matched by ``name`` between a baseline document (committed)
+  and a fresh document (just measured);
+* each row moves in its declared ``direction`` (``down`` = smaller is
+  better) and regresses when it worsens by more than its relative
+  tolerance;
+* tolerance is the row's explicit ``tol`` if present, else
+  :data:`TIMER_TOL` (±25%) for CPU-timer rows (``unit == "us"``), else
+  **exact** (``EXACT_EPS`` relative, to absorb float formatting) for
+  ratio/accuracy asserts;
+* CPU-timer rows are only gated when both snapshots carry the same
+  ``host`` fingerprint — absolute microseconds measured on different
+  machines are noise, so cross-host timer drift is *reported*, never
+  failed (ratio/accuracy rows gate unconditionally);
+* rows present on one side only are reported as notes, not failures —
+  partial benchmark runs (``--smoke --chaos`` vs a full sweep) are
+  legitimate.
+
+``scripts/perf_gate.py`` is the CLI: by default it compares the
+workspace ``BENCH_serve.json``/``BENCH_kernels.json`` against the
+committed copies (``git show HEAD:...``) and exits 1 on any regression.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+TIMER_TOL = 0.25      # relative tolerance for same-host CPU-timer rows
+EXACT_EPS = 1e-6      # relative slack on "exact" ratio/accuracy rows
+
+
+@dataclasses.dataclass
+class Delta:
+    """One compared row (or a one-sided note)."""
+
+    name: str
+    base: Optional[float]
+    fresh: Optional[float]
+    direction: str = "down"
+    tol: float = 0.0
+    gated: bool = True
+    regressed: bool = False
+    note: str = ""
+
+    def render(self) -> str:
+        if self.base is None:
+            return f"  new row (no baseline): {self.name} = {self.fresh}"
+        if self.fresh is None:
+            return f"  baseline row not in fresh run: {self.name}"
+        pct = 100.0 * (self.fresh - self.base) / abs(self.base) \
+            if self.base else 0.0
+        arrow = "▲" if self.fresh > self.base else \
+            ("▼" if self.fresh < self.base else "=")
+        status = "REGRESSED" if self.regressed else (
+            "ok" if self.gated else "ungated")
+        tolpct = f"±{self.tol * 100:.0f}%" if self.tol else "exact"
+        line = (f"  {status:9s} {self.name}: {self.base:g} -> "
+                f"{self.fresh:g} ({arrow} {pct:+.1f}%, want "
+                f"{self.direction}, tol {tolpct})")
+        if self.note:
+            line += f" [{self.note}]"
+        return line
+
+
+def tolerance_for(row: dict) -> float:
+    if row.get("tol") is not None:
+        return float(row["tol"])
+    if row.get("unit") == "us":
+        return TIMER_TOL
+    return 0.0
+
+
+def compare(base_doc: dict, fresh_doc: dict,
+            gate_timers: str = "auto") -> Tuple[List[Delta], List[Delta]]:
+    """Compare two (normalized) snapshot docs row by row.
+
+    ``gate_timers``: ``"auto"`` gates ``us`` rows only when host
+    fingerprints match, ``"always"``/``"never"`` force it.
+
+    Returns ``(regressions, all_deltas)``.
+    """
+    base_rows = {r["name"]: r for r in base_doc.get("rows", [])}
+    fresh_rows = {r["name"]: r for r in fresh_doc.get("rows", [])}
+    same_host = (base_doc.get("host") is not None
+                 and base_doc.get("host") == fresh_doc.get("host"))
+    deltas: List[Delta] = []
+    for name, b in base_rows.items():
+        f = fresh_rows.get(name)
+        if f is None:
+            deltas.append(Delta(name, b["value"], None, gated=False))
+            continue
+        direction = b.get("direction", "down")
+        tol = tolerance_for(b)
+        gated = True
+        note = ""
+        if b.get("unit") == "us":
+            if gate_timers == "never" or (gate_timers == "auto"
+                                          and not same_host):
+                gated = False
+                note = "cross-host timer: reported, not gated"
+        bad = _worsened(b["value"], f["value"], direction, tol)
+        deltas.append(Delta(name, b["value"], f["value"], direction, tol,
+                            gated=gated, regressed=bad and gated,
+                            note=note))
+    for name, f in fresh_rows.items():
+        if name not in base_rows:
+            deltas.append(Delta(name, None, f["value"], gated=False))
+    regressions = [d for d in deltas if d.regressed]
+    return regressions, deltas
+
+
+def _worsened(base: float, fresh: float, direction: str,
+              tol: float) -> bool:
+    slack = abs(base) * max(tol, EXACT_EPS) + 1e-12
+    if direction == "down":
+        return fresh > base + slack
+    return fresh < base - slack
+
+
+def gate(pairs: List[Tuple[dict, dict, str]],
+         gate_timers: str = "auto") -> Tuple[int, List[str]]:
+    """Run :func:`compare` over ``(base_doc, fresh_doc, label)`` pairs.
+
+    Returns ``(exit_code, report_lines)`` — 0 iff no gated row
+    regressed anywhere.
+    """
+    lines: List[str] = []
+    n_reg = 0
+    for base_doc, fresh_doc, label in pairs:
+        regs, deltas = compare(base_doc, fresh_doc, gate_timers)
+        n_reg += len(regs)
+        n_gated = sum(1 for d in deltas if d.gated)
+        lines.append(f"{label}: {len(deltas)} row(s), {n_gated} gated, "
+                     f"{len(regs)} regression(s)")
+        lines.extend(d.render() for d in deltas)
+    lines.append("perf gate: " + ("FAIL" if n_reg else "OK") +
+                 f" ({n_reg} regression(s))")
+    return (1 if n_reg else 0), lines

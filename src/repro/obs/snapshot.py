@@ -1,0 +1,140 @@
+"""One schema for every ``BENCH_*.json`` perf snapshot.
+
+``serve_bench --snapshot``, ``kernels_micro --snapshot`` and
+``kv_accuracy.py``'s merge path all used to hand-roll their JSON
+writers; :mod:`repro.obs.perfgate` needs a single schema to trust, so
+the row format and the write/merge/load logic live here.
+
+Row schema (all fields present after :func:`normalize_row`):
+
+===========  ============================================================
+field        meaning
+===========  ============================================================
+``name``     dotted metric name (``serve.chaos.goodput_pct``)
+``value``    float
+``unit``     ``"us"`` (CPU timer), ``"%"``, ``"B"``, ``"x"``, ``""`` ...
+``direction``  ``"down"`` = smaller is better, ``"up"`` = bigger is
+``derived``  free-text provenance shown in reports
+``tol``      optional per-row relative tolerance override for the gate
+===========  ============================================================
+
+Legacy snapshots (PR 6–9) carried only ``name``/``value``/``derived``;
+:func:`normalize_row` back-fills ``unit``/``direction`` from name
+heuristics so the gate can still read history.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Optional
+
+SCHEMA_VERSION = 2
+
+#: substrings marking a bigger-is-better metric in legacy (schema-1) rows
+_UP_HINTS = ("goodput", "reduction", "agreement", "identity", "resident",
+             "rate", "tok_s", "speedup")
+
+
+def make_row(name: str, value: float, derived: str = "", unit: str = "us",
+             direction: str = "down", tol: Optional[float] = None) -> dict:
+    if direction not in ("up", "down"):
+        raise ValueError(f"direction must be up/down, got {direction!r}")
+    row = {"name": name, "value": float(value), "unit": unit,
+           "direction": direction, "derived": derived}
+    if tol is not None:
+        row["tol"] = float(tol)
+    return row
+
+
+def infer_direction(name: str) -> str:
+    low = name.lower()
+    return "up" if any(h in low for h in _UP_HINTS) else "down"
+
+
+def infer_unit(name: str) -> str:
+    low = name.lower()
+    # every legacy kernels_micro row ("micro/...") is a wall-time in us
+    if "us_per" in low or low.endswith("_us") or low.startswith("micro/"):
+        return "us"
+    if low.endswith("_pct") or "pct" in low:
+        return "%"
+    if "bytes" in low:
+        return "B"
+    return ""
+
+
+def normalize_row(row: dict) -> dict:
+    """Fill schema-2 fields on a possibly-legacy row (non-destructive)."""
+    out = dict(row)
+    out.setdefault("derived", "")
+    out.setdefault("unit", infer_unit(row["name"]))
+    out.setdefault("direction", infer_direction(row["name"]))
+    out["value"] = float(out["value"])
+    return out
+
+
+def _host_fingerprint() -> str:
+    """Coarse host identity: timer rows are only *gated* between
+    snapshots from the same fingerprint (absolute CPU microseconds are
+    not comparable across machines — see docs/observability.md)."""
+    import platform
+    return f"{platform.machine()}-{os.cpu_count()}c"
+
+
+def _meta(**meta) -> dict:
+    import jax
+    base = {"date": time.strftime("%Y-%m-%d"),
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "host": _host_fingerprint(),
+            "schema": SCHEMA_VERSION}
+    base.update(meta)
+    return base
+
+
+def write_snapshot(path: str, rows: List[dict], **meta) -> dict:
+    """Write a fresh snapshot document (clobbers ``path``)."""
+    doc = _meta(**meta)
+    doc["rows"] = [normalize_row(r) for r in rows]
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[snapshot] wrote {len(rows)} row(s) -> {path}")
+    return doc
+
+
+def merge_snapshot(path: str, rows: List[dict], prefix: str,
+                   **meta) -> dict:
+    """Fold ``rows`` into an existing snapshot (or start one), replacing
+    stale rows under ``prefix`` and preserving everything else."""
+    doc = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    fresh = [normalize_row(r) for r in rows]
+    kept = [normalize_row(r) for r in doc.get("rows", [])
+            if not r["name"].startswith(prefix)]
+    for k, v in _meta(**meta).items():
+        doc.setdefault(k, v)
+    doc.update(meta)
+    doc["rows"] = kept + fresh
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[snapshot] merged {len(fresh)} row(s) under {prefix!r} -> "
+          f"{path} ({len(doc['rows'])} total)")
+    return doc
+
+
+def load_snapshot(path: str) -> dict:
+    """Load a snapshot with every row normalized to schema 2."""
+    with open(path) as f:
+        doc = json.load(f)
+    return loads_snapshot(doc)
+
+
+def loads_snapshot(doc: dict) -> dict:
+    doc = dict(doc)
+    doc["rows"] = [normalize_row(r) for r in doc.get("rows", [])]
+    return doc

@@ -45,6 +45,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import logging
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -53,6 +54,7 @@ import numpy as np
 
 from repro.core.kv_codebook import KVCodebook
 from repro.core.lut import DENSE, QuantConfig
+from repro.obs import Obs, safe_ratio
 
 from .kv_cache import PagedKVCache, PagePoolExhausted
 from .scheduler import FinishReason, Request, SlotPhase, SlotScheduler
@@ -122,6 +124,48 @@ DEFAULT_DEGRADATION = DegradationPolicy()
 
 def _i32(x) -> jax.Array:
     return jnp.asarray(x, jnp.int32)
+
+
+def _observe_request(obs: Obs, req) -> None:
+    """Record one finished request into ``obs.metrics`` (idempotent).
+
+    Emits the ``req.finish.*`` tally and the latency families — step
+    clock (TTFT / end-to-end in engine steps, from the scheduler's
+    ``arrival`` / ``first_token_step`` / ``finish_step`` stamps) and
+    wall clock (``*_s`` histograms plus TPOT, from the ``*_ts``
+    ``perf_counter`` stamps) — then closes the request's trace span.
+    Both engines and the shed/expire/truncate finish paths funnel here,
+    so ``serve_demo`` and ``serve_bench`` report from one accounting.
+    """
+    if req.finish_reason is None or getattr(req, "_obs_done", False):
+        return
+    req._obs_done = True
+    m = obs.metrics
+    m.counter("req.finish." + req.finish_reason.name.lower(),
+              unit="requests").inc()
+    if req.arrival is not None:
+        if req.first_token_step is not None:
+            m.histogram("req.ttft_steps", unit="steps", lo=1.0,
+                        hi=1e6).observe(req.first_token_step - req.arrival)
+        if req.finish_step is not None:
+            m.histogram("req.latency_steps", unit="steps", lo=1.0,
+                        hi=1e6).observe(req.finish_step - req.arrival)
+    if req.arrival_ts is not None:
+        if req.first_token_ts is not None:
+            m.histogram("req.ttft_s", unit="s").observe(
+                req.first_token_ts - req.arrival_ts)
+        if req.finish_ts is not None:
+            m.histogram("req.latency_s", unit="s").observe(
+                req.finish_ts - req.arrival_ts)
+            n_decoded = len(req.out_tokens) - 1
+            if n_decoded > 0 and req.first_token_ts is not None:
+                m.histogram("req.tpot_s", unit="s").observe(
+                    (req.finish_ts - req.first_token_ts) / n_decoded)
+    tr = obs.tracer
+    if tr.enabled and getattr(req, "_obs_traced", False):
+        tr.request_end(req._seq, f"req {req._seq}",
+                       {"reason": req.finish_reason.name,
+                        "tokens": len(req.out_tokens)})
 
 
 def _with_argmax(logits: jax.Array, kv):
@@ -228,7 +272,8 @@ class Engine:
                  max_queue: Optional[int] = None,
                  degradation: Optional[DegradationPolicy]
                  = DEFAULT_DEGRADATION,
-                 kv_codebook: Optional[KVCodebook] = None):
+                 kv_codebook: Optional[KVCodebook] = None,
+                 obs: Optional[Obs] = None):
         self.model = model
         self.params = params
         self.qc = qc
@@ -261,26 +306,48 @@ class Engine:
             raise ValueError(
                 "kv_codebook supplied but qc.kv_quant is 'none' — set "
                 "qc = qc.replace(kv_quant='vq') to serve quantized")
+        # Observability bundle (docs/observability.md): every counter
+        # below lives in ``obs.metrics`` behind same-named read-only
+        # properties, so the attribute surface tests and the router read
+        # is unchanged. The registry is always live (counters double as
+        # engine state); ``Obs.disabled()`` only compiles out the timing
+        # layer (phase histograms + trace spans). The scheduler and KV
+        # pool record into the same bundle; a shared ``Tracer`` across
+        # replicas merges them into one Perfetto timeline.
+        self.obs = obs if obs is not None else Obs()
+        met = self.obs.metrics
         self.kv = PagedKVCache(model, self.num_slots, max_seq,
                                page_size=page_size, num_pages=num_pages,
                                prefix_cache=prefix_cache,
                                codebook=self.kv_codebook)
-        self.scheduler = SlotScheduler(self.num_slots, max_queue=max_queue)
+        self.kv.obs = self.obs
+        self.scheduler = SlotScheduler(self.num_slots, max_queue=max_queue,
+                                       obs=self.obs)
         self.step_count = 0
         # Degradation ladder state (docs/robustness.md): mode 0..3, step
         # counts per mode for the stats surface, and a monotone count of
         # emitted tokens — the router watchdog's progress marker.
         self.degradation = degradation
         self.mode = MODE_NORMAL
-        self.mode_steps: Dict[int, int] = {m: 0 for m in range(4)}
-        self.emitted_tokens = 0
+        self._c_mode = tuple(
+            met.counter(f"engine.mode_steps.{MODE_NAMES[i]}", unit="steps",
+                        desc="steps spent in this degradation mode")
+            for i in range(4))
+        self._c_transitions = met.counter(
+            "engine.degradation.transitions", unit="transitions")
+        self._c_emitted = met.counter("engine.emitted_tokens",
+                                      unit="tokens")
         # Prefix-cache accounting (docs/serving.md §Prefix caching):
         #   prompt_tokens     — prompt tokens admitted (incl. re-admissions)
         #   cached_tokens     — of those, served from shared pages
         #   prefilled_tokens  — tokens actually pushed through prefill
-        self.prompt_tokens = 0
-        self.cached_tokens = 0
-        self.prefilled_tokens = 0
+        self._c_prompt = met.counter("engine.prompt_tokens", unit="tokens")
+        self._c_cached = met.counter("engine.cached_tokens", unit="tokens")
+        self._c_prefilled = met.counter("engine.prefilled_tokens",
+                                        unit="tokens")
+        self._g_pool_bytes = met.gauge("engine.pool.live_bytes", unit="B")
+        self._g_pressure = met.gauge("engine.pool.pressure")
+        self._g_mode = met.gauge("engine.mode")
 
         # Per-slot temperatures live in a DEVICE-RESIDENT (num_slots,)
         # buffer refreshed only when slot occupancy changes (admission /
@@ -288,7 +355,7 @@ class Engine:
         # counts the host->device transfers for the regression test.
         self._temps_h = np.zeros((self.num_slots,), np.float32)
         self._temps_dev: Optional[jax.Array] = None
-        self.temps_uploads = 0
+        self._c_temps = met.counter("engine.temps_uploads", unit="uploads")
 
         self.mesh = mesh
         self._table_sharding = None
@@ -320,16 +387,21 @@ class Engine:
                 key, logits, temps, range(nslots)))
         # Host-transfer accounting: every per-step device->host read in
         # the serving loop goes through _device_read, which bumps this.
-        self.device_reads = 0
+        self._c_device_reads = met.counter("engine.device_reads",
+                                           unit="reads")
 
         # Speculative decoding (docs/speculative.md): draft cheap, verify
         # with the target in one multi-token call, roll back rejections.
         self.spec = spec_decode
         self.drafter = None
-        self.spec_rounds = 0       # verify calls issued
-        self.spec_drafted = 0      # proposals scored
-        self.spec_accepted = 0     # proposals that survived
-        self.spec_emitted = 0      # tokens emitted by spec rounds
+        self._c_spec_rounds = met.counter(      # verify calls issued
+            "engine.spec.rounds", unit="rounds")
+        self._c_spec_drafted = met.counter(     # proposals scored
+            "engine.spec.drafted", unit="tokens")
+        self._c_spec_accepted = met.counter(    # proposals that survived
+            "engine.spec.accepted", unit="tokens")
+        self._c_spec_emitted = met.counter(     # tokens emitted by spec
+            "engine.spec.emitted", unit="tokens")
         if spec_decode is not None:
             if not self.kv.paged:
                 raise ValueError(
@@ -430,9 +502,12 @@ class Engine:
         step costs exactly one transfer and ``device_reads`` counts them
         for the regression tests (test_recompile_guard.py). This is the
         sanctioned sync point; the `analysis` linter flags any other
-        read reachable from the step loop."""
-        self.device_reads += 1
-        return jax.device_get(tree)  # analysis: ok(step-sync)
+        read reachable from the step loop. Because the step loop blocks
+        HERE (and only here), the ``device_read`` phase span measures
+        the true device wait, not dispatch overhead."""
+        self._c_device_reads.inc()
+        with self.obs.phase("device_read"):
+            return jax.device_get(tree)  # analysis: ok(step-sync)
 
     # ------------------------------------------------------------------
     # sampling
@@ -469,7 +544,7 @@ class Engine:
                                                  self._table_sharding)
             else:
                 self._temps_dev = jnp.asarray(self._temps_h)
-            self.temps_uploads += 1
+            self._c_temps.inc()
         return self._temps_dev
 
     @property
@@ -478,11 +553,59 @@ class Engine:
         return len(self.scheduler.waiting) + sum(
             not s.free for s in self.scheduler.slots)
 
+    # ------------------------------------------------------------------
+    # registry-backed counter surface (legacy attribute names)
+    # ------------------------------------------------------------------
+    @property
+    def mode_steps(self) -> Dict[int, int]:
+        """Steps spent in each degradation mode (``{mode: steps}``)."""
+        return {i: c.value for i, c in enumerate(self._c_mode)}
+
+    @property
+    def emitted_tokens(self) -> int:
+        return self._c_emitted.value
+
+    @property
+    def prompt_tokens(self) -> int:
+        return self._c_prompt.value
+
+    @property
+    def cached_tokens(self) -> int:
+        return self._c_cached.value
+
+    @property
+    def prefilled_tokens(self) -> int:
+        return self._c_prefilled.value
+
+    @property
+    def temps_uploads(self) -> int:
+        return self._c_temps.value
+
+    @property
+    def device_reads(self) -> int:
+        return self._c_device_reads.value
+
+    @property
+    def spec_rounds(self) -> int:
+        return self._c_spec_rounds.value
+
+    @property
+    def spec_drafted(self) -> int:
+        return self._c_spec_drafted.value
+
+    @property
+    def spec_accepted(self) -> int:
+        return self._c_spec_accepted.value
+
+    @property
+    def spec_emitted(self) -> int:
+        return self._c_spec_emitted.value
+
     @property
     def prefix_hit_rate(self) -> float:
-        """Fraction of admitted prompt tokens served from shared pages."""
-        return self.cached_tokens / self.prompt_tokens \
-            if self.prompt_tokens else 0.0
+        """Fraction of admitted prompt tokens served from shared pages
+        (0.0 before any admission — never a division error)."""
+        return safe_ratio(self._c_cached.value, self._c_prompt.value)
 
     # ------------------------------------------------------------------
     # public API
@@ -507,9 +630,15 @@ class Engine:
         self.kv.check_admissible(len(req.tokens) + len(req.out_tokens))
         if req.arrival is None:
             req.arrival = self.step_count
+        if req.arrival_ts is None:
+            req.arrival_ts = time.perf_counter()
         victim = self.scheduler.submit(req)
-        if victim is not None and victim.finish_step is None:
-            victim.finish_step = self.step_count
+        if victim is not req:
+            self._obs_request_start(req)
+        if victim is not None:
+            if victim.finish_step is None:
+                victim.finish_step = self.step_count
+            _observe_request(self.obs, victim)
         return victim
 
     def requeue(self, req: Request) -> None:
@@ -520,7 +649,30 @@ class Engine:
         self.kv.check_admissible(len(req.tokens) + len(req.out_tokens))
         if req.arrival is None:
             req.arrival = self.step_count
+        if req.arrival_ts is None:
+            req.arrival_ts = time.perf_counter()
         self.scheduler.requeue(req, front=True, count_retry=False)
+        self._obs_request_start(req)
+
+    def _obs_request_start(self, req) -> None:
+        """Open (or re-annotate) the request's lifecycle trace span.
+
+        All request spans live on the dedicated ``REQUEST_PID`` track,
+        keyed by the scheduler sequence number — a request that migrates
+        replicas after a crash stays one span, with a ``requeued``
+        marker at each re-admission."""
+        tr = self.obs.tracer
+        if not tr.enabled or req._seq < 0:
+            return
+        rid = req._seq
+        if getattr(req, "_obs_traced", False):
+            tr.request_instant(rid, f"req {rid}", "requeued")
+        else:
+            req._obs_traced = True
+            tr.request_begin(rid, f"req {rid}",
+                             {"prompt": len(req.tokens),
+                              "max_new": req.max_new_tokens,
+                              "priority": req.priority})
 
     def run(self, requests: List[Request]) -> List[Request]:
         """Serve all requests to completion (continuous batching)."""
@@ -582,6 +734,10 @@ class Engine:
             log.info("degradation %s -> %s (pressure %.2f, %s)",
                      MODE_NAMES[self.mode], MODE_NAMES[new],
                      self.pressure, self.kv.occupancy())
+            self._c_transitions.inc()
+            self.obs.annotate("degradation", frm=MODE_NAMES[self.mode],
+                              to=MODE_NAMES[new],
+                              pressure=round(self.pressure, 3))
         self.mode = new
 
     def step(self) -> bool:
@@ -595,27 +751,38 @@ class Engine:
         Returns False when there was nothing to do.
         """
         self._update_degradation()
-        self.mode_steps[self.mode] += 1
-        for req in self.scheduler.expire_deadlines(self.step_count, self.kv):
-            log.info("request expired past deadline_steps=%s",
-                     req.deadline_steps)
-        for s in self.scheduler.slots:       # expiry may have freed lanes
-            if s.free:
-                self._set_slot_temp(s.idx, 0.0)
-        # Admission stops at the top of the ladder — but never on an idle
-        # engine (nothing running = nothing will release pages, so waiting
-        # would deadlock; pressure on an idle pool is ~0 anyway unless
-        # pages are held externally, and then admit() simply waits).
-        if (self.mode < MODE_STOP_ADMIT
-                or not self.scheduler.occupied_slots()):
-            for slot in self.scheduler.admit(self.kv):
-                self._set_slot_temp(slot.idx, slot.req.temperature)
-                self.prompt_tokens += slot.prefill_len
-                self.cached_tokens += slot.pos  # admission set pos = matched
+        self._c_mode[self.mode].inc()
+        obs = self.obs
+        if obs.active:        # pool gauges: host ints, but O(pages) scans
+            self._g_pool_bytes.set(float(self.kv.live_bytes))
+            self._g_pressure.set(self.pressure)
+            self._g_mode.set(float(self.mode))
+            obs.track("pool.pressure", self.pressure)
+        with obs.phase("admit"):
+            for req in self.scheduler.expire_deadlines(self.step_count,
+                                                       self.kv):
+                log.info("request expired past deadline_steps=%s",
+                         req.deadline_steps)
+                _observe_request(obs, req)
+            for s in self.scheduler.slots:   # expiry may have freed lanes
+                if s.free:
+                    self._set_slot_temp(s.idx, 0.0)
+            # Admission stops at the top of the ladder — but never on an
+            # idle engine (nothing running = nothing will release pages,
+            # so waiting would deadlock; pressure on an idle pool is ~0
+            # anyway unless pages are held externally, and then admit()
+            # simply waits).
+            if (self.mode < MODE_STOP_ADMIT
+                    or not self.scheduler.occupied_slots()):
+                for slot in self.scheduler.admit(self.kv):
+                    self._set_slot_temp(slot.idx, slot.req.temperature)
+                    self._c_prompt.inc(slot.prefill_len)
+                    self._c_cached.inc(slot.pos)  # admission: pos = matched
         progressed = False
         slot = self.scheduler.next_prefill()
         if slot is not None:
-            self._prefill_chunk_step(slot)
+            with obs.phase("prefill_chunk"):
+                self._prefill_chunk_step(slot)
             progressed = True
         if self.scheduler.decode_slots():
             if self.spec is not None and self.mode < MODE_NO_SPEC:
@@ -685,7 +852,7 @@ class Engine:
                 self.kv.table_device(self._table_sharding), _i32(slot.idx),
                 _i32(slot.pos), _i32(valid))
         slot.pos += valid
-        self.prefilled_tokens += valid
+        self._c_prefilled.inc(valid)
         # index the prompt pages this chunk completed: from here on other
         # requests sharing the prefix can map them instead of recomputing
         self.kv.register_prefix(slot.idx, slot.prompt, slot.pos)
@@ -713,8 +880,10 @@ class Engine:
         except PagePoolExhausted:
             if self.kv.pages_for(s.pos + 1) > \
                     self.kv.table.allocator.num_pages:
-                s.req.finish(FinishReason.TRUNCATED, self.step_count)
+                req = s.req          # _evict clears slot.req
+                req.finish(FinishReason.TRUNCATED, self.step_count)
                 self._evict(s)
+                _observe_request(self.obs, req)
             else:
                 self.scheduler.preempt(s, self.kv)
                 self._set_slot_temp(s.idx, 0.0)
@@ -741,11 +910,14 @@ class Engine:
         # NOT rebuilt and re-uploaded every decode step
         temps = self._decode_temps()
         with self._mesh_scope():
-            logits, self.kv.data = self._jit_decode(
-                self.params, jnp.asarray(toks), self.kv.data,
-                self.kv.table_device(self._table_sharding),
-                jnp.asarray(positions))
-            self.key, nxt_dev = self._jit_sample(self.key, logits, temps)
+            with self.obs.phase("decode"):
+                logits, self.kv.data = self._jit_decode(
+                    self.params, jnp.asarray(toks), self.kv.data,
+                    self.kv.table_device(self._table_sharding),
+                    jnp.asarray(positions))
+            with self.obs.phase("sample"):
+                self.key, nxt_dev = self._jit_sample(self.key, logits,
+                                                     temps)
         nxt = self._device_read(nxt_dev)
         for s in dslots:
             s.pos += 1
@@ -756,15 +928,17 @@ class Engine:
     # ------------------------------------------------------------------
     @property
     def acceptance_rate(self) -> float:
-        """Fraction of draft proposals the target accepted."""
-        return self.spec_accepted / self.spec_drafted \
-            if self.spec_drafted else 0.0
+        """Fraction of draft proposals the target accepted (0.0 before
+        any verify round — never a division error)."""
+        return safe_ratio(self._c_spec_accepted.value,
+                          self._c_spec_drafted.value)
 
     @property
     def tokens_per_verify(self) -> float:
-        """Mean tokens emitted per verify call (1.0 = no speculation win)."""
-        return self.spec_emitted / self.spec_rounds \
-            if self.spec_rounds else 0.0
+        """Mean tokens emitted per verify call (1.0 = no speculation win;
+        0.0 before any round)."""
+        return safe_ratio(self._c_spec_emitted.value,
+                          self._c_spec_rounds.value)
 
     def _spec_decode_step(self) -> None:
         """One draft/verify round over every decoding slot.
@@ -805,7 +979,9 @@ class Engine:
             if self.drafter.writes_kv:
                 kk = self._reserve_lookahead(s.idx, s.pos, kk)
             k_slot[s.idx] = kk
-        g, n_prop, q_rows = self.drafter.propose(self, dslots, k_slot, k)
+        with self.obs.phase("draft"):
+            g, n_prop, q_rows = self.drafter.propose(self, dslots, k_slot,
+                                                     k)
         if not self.drafter.writes_kv:
             for s in dslots:
                 n_prop[s.idx] = self._reserve_lookahead(
@@ -821,17 +997,18 @@ class Engine:
             posv[s.idx] = s.pos
             nlive[s.idx] = n + 1
         with self._mesh_scope():
-            logits, ids, self.kv.data = self._jit_verify(
-                self.params, jnp.asarray(toks), self.kv.data,
-                self.kv.table_device(self._table_sharding),
-                jnp.asarray(posv), jnp.asarray(nlive))
+            with self.obs.phase("verify"):
+                logits, ids, self.kv.data = self._jit_verify(
+                    self.params, jnp.asarray(toks), self.kv.data,
+                    self.kv.table_device(self._table_sharding),
+                    jnp.asarray(posv), jnp.asarray(nlive))
         # all-greedy rounds pull only the (B, k+1) argmax ids; the full
         # logits tensor rides the SAME single transfer only when a
         # temperature slot needs distributions for rejection sampling
         need_q = any(s.req.temperature > 0.0 for s in dslots)
         got = self._device_read((ids, logits) if need_q else (ids,))
         ids_h, lg = got[0], (got[1] if need_q else None)
-        self.spec_rounds += 1
+        self._c_spec_rounds.inc()
         for s in dslots:
             n = int(n_prop[s.idx])
             draft = [int(t) for t in g[s.idx, :n]]
@@ -841,13 +1018,13 @@ class Engine:
                 draft, None if lg is None else lg[s.idx, :n + 1],
                 s.req.temperature, self._spec_rng, rows,
                 targets=ids_h[s.idx, :n + 1])
-            self.spec_drafted += n
-            self.spec_accepted += accepted
+            self._c_spec_drafted.inc(n)
+            self._c_spec_accepted.inc(accepted)
             req = s.req              # _record_token may evict (slot.req=None)
             for tok in out:
                 s.pos += 1
                 self._record_token(s, tok)
-                self.spec_emitted += 1
+                self._c_spec_emitted.inc()
                 if req.done:         # EOS/budget/truncation: drop the rest
                     break
             if not req.done:
@@ -864,9 +1041,10 @@ class Engine:
         """Append a sampled token and apply the eviction rules."""
         req = slot.req
         req.out_tokens.append(tok)
-        self.emitted_tokens += 1
+        self._c_emitted.inc()
         if req.first_token_step is None:
             req.first_token_step = self.step_count
+            req.first_token_ts = time.perf_counter()
         slot.next_token = tok
         hit_eos = self.eos_id is not None and tok == self.eos_id
         budget_done = len(req.out_tokens) >= req.max_new_tokens
@@ -875,6 +1053,7 @@ class Engine:
             req.finish(FinishReason.COMPLETED if (hit_eos or budget_done)
                        else FinishReason.TRUNCATED, self.step_count)
             self._evict(slot)
+            _observe_request(self.obs, req)
 
 
 class BatchToCompletionEngine:
@@ -891,7 +1070,8 @@ class BatchToCompletionEngine:
 
     def __init__(self, model, params, qc: QuantConfig = DENSE,
                  batch_size: int = 8, max_seq: int = 512,
-                 eos_id: Optional[int] = None, seed: int = 0):
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 obs: Optional[Obs] = None):
         if model.cfg.family in ("ssm", "hybrid"):
             raise ValueError(
                 "BatchToCompletionEngine left-pads prompts, which an SSM "
@@ -915,6 +1095,10 @@ class BatchToCompletionEngine:
         # decode step, so Request.first_token_step / finish_step are
         # comparable with the continuous engine's step_count timestamps.
         self.step_count = 0
+        # same latency accounting as the continuous engine (the ``req.*``
+        # families land in obs.metrics), so serve_demo/serve_bench report
+        # both engines from one registry surface
+        self.obs = obs if obs is not None else Obs()
 
         self._prefill = jax.jit(
             lambda p, b, c, pl: model.prefill(p, b, c, qc, pad_lens=pl))
@@ -931,6 +1115,11 @@ class BatchToCompletionEngine:
 
     def run(self, requests: List[Request]) -> List[Request]:
         """Serve all requests (in submission-order batches of batch_size)."""
+        for r in requests:
+            if r.arrival is None:
+                r.arrival = self.step_count
+            if r.arrival_ts is None:
+                r.arrival_ts = time.perf_counter()
         for i in range(0, len(requests), self.batch_size):
             self._run_batch(requests[i:i + self.batch_size])
         return requests
@@ -974,6 +1163,7 @@ class BatchToCompletionEngine:
                     r.out_tokens.append(t)
                     if r.first_token_step is None:
                         r.first_token_step = self.step_count
+                        r.first_token_ts = time.perf_counter()
                     if (self.eos_id is not None and t == self.eos_id) or \
                             len(r.out_tokens) >= r.max_new_tokens:
                         r.finish(FinishReason.COMPLETED, self.step_count)
@@ -990,6 +1180,7 @@ class BatchToCompletionEngine:
         for r in reqs:
             # anything still unfinished was truncated at max_seq: stamp
             r.finish(FinishReason.TRUNCATED, self.step_count)
+            _observe_request(self.obs, r)
 
 
 def greedy_generate(model, params, prompt_tokens, n_new: int,

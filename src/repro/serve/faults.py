@@ -283,6 +283,13 @@ class FaultInjector:
 
     def _log(self, fault: Fault, note: str) -> None:
         self.fired.append((self.clock, fault, note))
+        # surface the injection on the victim replica's trace track so
+        # chaos traces show *why* a span stalled or a request migrated
+        if fault.replica < len(self._engines):
+            obs = getattr(self._engines[fault.replica], "obs", None)
+            if obs is not None:
+                obs.annotate(f"fault.{fault.kind}", step=fault.step,
+                             clock=self.clock, note=note)
 
     def _squeeze(self, i: int, fault: Fault) -> None:
         """Grab every free page of replica ``i``'s pool (reclaiming the

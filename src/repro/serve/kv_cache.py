@@ -633,6 +633,9 @@ class PagedKVCache:
             num_pages=self.table.allocator.num_pages, dtype=dtype,
             codebook=codebook)
         self.cow_forks = 0
+        # set by Engine: CoW forks annotate the owning replica's trace
+        # track (docs/observability.md); None outside an engine
+        self.obs = None
         if self.paged:
             self.table.page_bytes = self.page_bytes
 
@@ -733,6 +736,9 @@ class PagedKVCache:
             copied = _copy_page(pages, jnp.int32(src), jnp.int32(dst))
             self.data = {**self.data, **copied}
             self.cow_forks += 1
+            if self.obs is not None:
+                self.obs.annotate("cow_fork", slot=slot, src=int(src),
+                                  dst=int(dst))
         return match.tokens
 
     def register_prefix(self, slot: int, tokens, n_covered: int) -> None:

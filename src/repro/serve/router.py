@@ -62,6 +62,7 @@ import logging
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.lut import DENSE, QuantConfig
+from repro.obs import Obs
 
 from .engine import Engine
 from .faults import ReplicaCrashed
@@ -138,10 +139,25 @@ class ReplicaRouter:
                  stall_steps: Optional[int] = 16,
                  recover_after: int = 3,
                  retry_backoff: int = 1,
-                 retry_backoff_cap: int = 16):
+                 retry_backoff_cap: int = 16,
+                 obs: Optional[Obs] = None):
         if not engines:
             raise ValueError("ReplicaRouter needs at least one engine")
         self.engines: List[Engine] = list(engines)
+        # Router-level observability: its own registry for cluster-wide
+        # tallies (retries, health transitions); per-replica counters
+        # stay in each engine's registry. Each engine's trace track gets
+        # the replica index as pid (docs/observability.md).
+        self.obs = obs if obs is not None else Obs()
+        met = self.obs.metrics
+        self._c_retried = met.counter("router.retried_requests",
+                                      unit="requests")
+        self._c_health = {
+            h: met.counter(f"router.health.to_{h.value}",
+                           unit="transitions") for h in ReplicaHealth}
+        for i, e in enumerate(self.engines):
+            e.obs.pid = i
+            e.obs.tracer.name_process(i, f"replica {i}")
         self.prefix_affinity = prefix_affinity
         # Affinity must not collapse DP onto one hot replica: only
         # replicas within `slack` load of the least-loaded are affinity
@@ -158,7 +174,6 @@ class ReplicaRouter:
         self.status: List[ReplicaStatus] = [ReplicaStatus()
                                             for _ in self.engines]
         self.step_count = 0
-        self.retried_requests = 0
         # (ready_step, seq, request) — seq keeps heap order deterministic
         self._retries: List[Tuple[int, int, Request]] = []
         self._retry_seq = itertools.count()
@@ -203,6 +218,22 @@ class ReplicaRouter:
         return self.status[i].health
 
     @property
+    def retried_requests(self) -> int:
+        return self._c_retried.value
+
+    def _set_health(self, i: int, health: ReplicaHealth,
+                    note: str = "") -> None:
+        """THE health-transition funnel: counts the flip and annotates
+        the replica's trace track; no-op when the state is unchanged."""
+        st = self.status[i]
+        if st.health is health:
+            return
+        self._c_health[health].inc()
+        self.engines[i].obs.annotate("health", frm=st.health.value,
+                                     to=health.value, note=note)
+        st.health = health
+
+    @property
     def alive_replicas(self) -> List[int]:
         return [i for i, st in enumerate(self.status)
                 if st.health is not ReplicaHealth.DEAD]
@@ -221,7 +252,7 @@ class ReplicaRouter:
             raise ValueError(f"replica {i} is dead, nothing to drain")
         log.info("draining replica %d (%s, load %d)", i,
                  st.health.value, self.engines[i].load)
-        st.health = ReplicaHealth.DRAINING
+        self._set_health(i, ReplicaHealth.DRAINING, "drain()")
 
     def drained(self, i: int) -> bool:
         """Whether a draining replica has finished its in-flight work."""
@@ -234,7 +265,7 @@ class ReplicaRouter:
         if st.health is not ReplicaHealth.DRAINING:
             raise ValueError(
                 f"replica {i} is {st.health.value}, not draining")
-        st.health = ReplicaHealth.HEALTHY
+        self._set_health(i, ReplicaHealth.HEALTHY, "undrain()")
         st.consecutive_failures = 0
         st.clean_steps = 0
         st.last_progress_step = self.step_count
@@ -243,7 +274,7 @@ class ReplicaRouter:
         """Declare replica ``i`` dead and requeue its in-flight requests
         onto the surviving replicas (capped exponential backoff)."""
         eng, st = self.engines[i], self.status[i]
-        st.health = ReplicaHealth.DEAD
+        self._set_health(i, ReplicaHealth.DEAD, reason)
         st.death_reason = reason
         reqs = eng.scheduler.drain_requests(eng.kv)
         st.recovered_requests += len(reqs)
@@ -272,7 +303,8 @@ class ReplicaRouter:
             if st.health is ReplicaHealth.HEALTHY:
                 log.warning("replica %d degraded: step failed (%s: %s)",
                             i, type(exc).__name__, exc)
-                st.health = ReplicaHealth.DEGRADED
+                self._set_health(i, ReplicaHealth.DEGRADED,
+                                 f"{type(exc).__name__}: {exc}")
 
     def _watch_progress(self, i: int) -> None:
         """Stall detection + degraded-replica recovery after a clean step."""
@@ -286,7 +318,8 @@ class ReplicaRouter:
             if (st.health is ReplicaHealth.DEGRADED
                     and st.clean_steps >= self.recover_after):
                 log.info("replica %d recovered (healthy)", i)
-                st.health = ReplicaHealth.HEALTHY
+                self._set_health(i, ReplicaHealth.HEALTHY,
+                                 f"{st.clean_steps} clean steps")
         elif (self.stall_steps is not None
               and eng.scheduler.has_work
               and self.step_count - st.last_progress_step
@@ -391,7 +424,7 @@ class ReplicaRouter:
                     "cannot recover request: no admitting replicas "
                     "(all draining or dead)")
             ranked[0].requeue(req)
-            self.retried_requests += 1
+            self._c_retried.inc()
             log.info("requeued recovered request (retry %d) onto "
                      "replica %d", req.retries,
                      self.engines.index(ranked[0]))

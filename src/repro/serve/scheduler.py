@@ -45,8 +45,11 @@ import dataclasses
 import enum
 import itertools
 import logging
+import time
 from collections import deque
 from typing import Deque, List, Optional
+
+from repro.obs import Obs
 
 from .kv_cache import PagedKVCache, PagePoolExhausted
 
@@ -100,6 +103,10 @@ class Request:
       retries: re-admissions of this request — preemption requeues and
         replica-crash recoveries. The router's requeue backoff is
         ``min(cap, base · 2^(retries-1))`` router steps.
+      arrival_ts / first_token_ts / finish_ts: wall-clock
+        (``perf_counter``) twins of the step stamps, taken at the same
+        already-host points — the ``req.*_s`` latency families in
+        ``obs.metrics`` come from these (docs/observability.md).
     """
     tokens: List[int]
     max_new_tokens: int = 32
@@ -114,6 +121,12 @@ class Request:
     finish_step: Optional[int] = None
     cached_tokens: int = 0
     retries: int = 0
+    arrival_ts: Optional[float] = dataclasses.field(default=None,
+                                                    repr=False)
+    first_token_ts: Optional[float] = dataclasses.field(default=None,
+                                                        repr=False)
+    finish_ts: Optional[float] = dataclasses.field(default=None,
+                                                   repr=False)
     # queue tiebreaker: submission order within a priority class
     _seq: int = dataclasses.field(default=-1, repr=False, compare=False)
 
@@ -123,6 +136,7 @@ class Request:
             return
         self.done = True
         self.finish_reason = reason
+        self.finish_ts = time.perf_counter()
         if self.finish_step is None:
             self.finish_step = step
 
@@ -174,12 +188,37 @@ class SlotScheduler:
     request that made it into a slot is never shed on its way back.
     """
 
-    def __init__(self, num_slots: int, max_queue: Optional[int] = None):
+    def __init__(self, num_slots: int, max_queue: Optional[int] = None,
+                 obs: Optional[Obs] = None):
         self.slots = [Slot(i) for i in range(num_slots)]
         self.waiting: Deque[Request] = deque()
         self.max_queue = max_queue
-        self.shed_count = 0
-        self.expired_count = 0
+        # The engine passes its Obs so scheduler tallies land in the same
+        # registry; a standalone scheduler gets a private one — the
+        # counters below are live either way (tests construct bare
+        # schedulers and read shed_count/expired_count).
+        self.obs = obs if obs is not None else Obs()
+        met = self.obs.metrics
+        self._c_shed = met.counter("sched.shed_requests", unit="requests",
+                                   desc="requests dropped by the bounded "
+                                        "admission queue")
+        self._c_expired = met.counter("sched.expired_requests",
+                                      unit="requests",
+                                      desc="requests past deadline_steps")
+        self._c_preempt = met.counter("sched.preemptions",
+                                      unit="preemptions")
+
+    @property
+    def shed_count(self) -> int:
+        return self._c_shed.value
+
+    @property
+    def expired_count(self) -> int:
+        return self._c_expired.value
+
+    @property
+    def preemptions(self) -> int:
+        return self._c_preempt.value
 
     # -- queue --------------------------------------------------------------
     def _insert(self, req: Request) -> None:
@@ -211,7 +250,7 @@ class SlotScheduler:
                 self.waiting.remove(victim)
                 self._insert(req)
             victim.finish(LoadShedded, None)
-            self.shed_count += 1
+            self._c_shed.inc()
             log.info("load-shed request (priority=%d, queue=%d/%s)",
                      victim.priority, len(self.waiting), self.max_queue)
             return victim
@@ -278,7 +317,7 @@ class SlotScheduler:
                     keep.append(req)
             if len(keep) != len(self.waiting):
                 self.waiting = deque(keep)
-        self.expired_count += len(expired)
+        self._c_expired.inc(len(expired))
         return expired
 
     # -- admission ----------------------------------------------------------
@@ -387,6 +426,9 @@ class SlotScheduler:
         log.info(
             "preempting slot %d (%s, %d cached tokens) to reclaim pages; %s",
             slot.idx, slot.phase.value, slot.pos, kv.occupancy())
+        self._c_preempt.inc()
+        self.obs.annotate("preempt", slot=slot.idx,
+                          phase=slot.phase.value, cached=slot.pos)
         self.evict(slot, kv)
         self.requeue(req, front=True)
         return req
